@@ -1,0 +1,42 @@
+"""Paper Fig. 3 (normalized performance) + Fig. 4 (EDP) — all
+workloads × policies × machines on the simulator."""
+
+from __future__ import annotations
+
+from repro.runtime import KNL, MN4, SimExecutor
+from repro.workloads import WORKLOADS
+
+from .common import PAPER_BENCHES, SCALED, emit
+
+POLICIES = ["busy", "idle", "hybrid", "prediction"]
+
+
+def run() -> list[dict]:
+    rows = []
+    for machine in (MN4, KNL):
+        for name in PAPER_BENCHES:
+            reports = {}
+            for policy in POLICIES:
+                g = WORKLOADS[name](seed=0, **SCALED.get(name, {}))
+                reports[policy] = SimExecutor(
+                    machine, policy=policy, monitoring=True).run(g)
+            best_t = min(r.makespan for r in reports.values())
+            best_edp = min(r.edp for r in reports.values())
+            for policy, r in reports.items():
+                rows.append({
+                    "bench": "policies", "machine": machine.name,
+                    "workload": name, "policy": policy,
+                    "makespan_ms": round(r.makespan * 1e3, 3),
+                    "norm_perf": round(best_t / r.makespan, 4),
+                    "energy": round(r.energy, 4),
+                    "edp": round(r.edp, 6),
+                    "norm_edp": round(r.edp / best_edp, 3),
+                    "resumes": r.resumes,
+                    "predictions": r.predictions,
+                })
+                emit(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Roofline table — reads the dry-run artifacts produced by
+``python -m repro.launch.dryrun --all`` and prints the per-cell terms
+(EXPERIMENTS.md §Roofline is generated from this).
+
+If no artifacts exist yet this benchmark reports that fact rather than
+recomputing them (the 512-device lower+compile sweep is the dry-run
+driver's job, and must not run inside the 1-device benchmark process).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> list[dict]:
+    rows = []
+    files = sorted(ART.glob("*.json")) if ART.exists() else []
+    if not files:
+        emit({"bench": "roofline",
+              "status": "no artifacts — run python -m repro.launch.dryrun --all"})
+        return rows
+    for f in files:
+        r = json.loads(f.read_text())
+        if r.get("tag"):
+            continue          # hillclimb variants reported in §Perf
+        t = r["terms"]
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"],
+            "compute_ms": round(t["compute_s"] * 1e3, 3),
+            "memory_ms": round(t["memory_s"] * 1e3, 3),
+            "collective_ms": round(t["collective_s"] * 1e3, 3),
+            "dominant": t["dominant"],
+            "useful_ratio": round(t["useful_ratio"], 3),
+            "fits_16GB": r["fits_16GB"],
+            "adj_peak_GB": round(
+                r["memory"].get("adjusted_peak_bytes",
+                                r["memory"]["peak_estimate_bytes"]) / 1e9,
+                2),
+        })
+        emit(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Table 3 — concurrent Gauss-Seidel + STREAM under DLB policies.
+
+Configurations: Single (each app alone on one NUMA node = 24 CPUs),
+Concurrent (no sharing), Concurrent + DLB {LeWI, Hybrid, Prediction}.
+Reported per app: time, EDP, #DLB calls.
+"""
+
+from __future__ import annotations
+
+from repro.core import ResourceBroker
+from repro.runtime import MN4, SimCluster, SimExecutor, SimJobSpec
+from repro.workloads import build_gauss_seidel, build_stream
+
+from .common import emit
+
+GS_KW = dict(steps=40, bi=12, bj=12, block_elems=1_500_000, seed=0)
+ST_KW = dict(rounds=25, blocks=900, seed=1)
+
+
+def _emit(rows, config, name, rep, calls):
+    rows.append({
+        "bench": "sharing", "config": config, "app": name,
+        "time_s": round(rep.makespan, 4),
+        "edp": round(rep.edp, 4),
+        "dlb_calls": calls,
+    })
+    emit(rows[-1])
+
+
+def run() -> list[dict]:
+    rows = []
+    # Single: each app alone on half the node, idle policy (paper: the
+    # Single policy idles CPUs when unused).
+    for name, graph in (("gauss", build_gauss_seidel(**GS_KW)),
+                        ("stream", build_stream(**ST_KW))):
+        rep = SimExecutor(MN4, policy="idle", n_cpus=24,
+                          monitoring=True).run(graph)
+        _emit(rows, "single", name, rep, 0)
+
+    # Concurrent without DLB: both apps pinned to their half, busy.
+    cl = SimCluster(MN4)
+    cl.add_job(SimJobSpec(name="gauss", graph=build_gauss_seidel(**GS_KW),
+                          policy="busy", cpus=list(range(24))))
+    cl.add_job(SimJobSpec(name="stream", graph=build_stream(**ST_KW),
+                          policy="busy", cpus=list(range(24, 48))))
+    for name, rep in cl.run().items():
+        _emit(rows, "concurrent", name, rep, 0)
+
+    # Concurrent + DLB variants.
+    for policy, label in (("dlb-lewi", "dlb_lewi"),
+                          ("dlb-hybrid", "dlb_hybrid"),
+                          ("dlb-prediction", "dlb_prediction")):
+        broker = ResourceBroker()
+        cl = SimCluster(MN4, broker=broker)
+        cl.add_job(SimJobSpec(name="gauss",
+                              graph=build_gauss_seidel(**GS_KW),
+                              policy=policy, cpus=list(range(24))))
+        cl.add_job(SimJobSpec(name="stream", graph=build_stream(**ST_KW),
+                              policy=policy, cpus=list(range(24, 48))))
+        reps = cl.run()
+        for name, rep in reps.items():
+            _emit(rows, label, name, rep, rep.dlb_calls)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing: CSV output + workload catalog."""
+
+from __future__ import annotations
+
+import sys
+
+
+def emit(row: dict) -> None:
+    """One CSV-ish line: key=value pairs, stable order."""
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    sys.stdout.flush()
+
+
+#: benchmarks × machines used across the paper reproductions
+PAPER_BENCHES = ["cholesky-fine", "cholesky-coarse", "hpccg",
+                 "gauss-seidel", "multisaxpy-fine", "multisaxpy-coarse"]
+
+#: smaller builder kwargs so the full sweep stays minutes, not hours —
+#: granularity ratios (task length vs f) preserved
+SCALED = {
+    "cholesky-fine": dict(p=24),
+    "cholesky-coarse": dict(),
+    "hpccg": dict(iterations=25),
+    "gauss-seidel": dict(steps=30),
+    "multisaxpy-fine": dict(generations=60),
+    "multisaxpy-coarse": dict(generations=15),
+    "stream": dict(rounds=15),
+}

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_tables >> EXPERIMENTS.md
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+ARCH_ORDER = ["internvl2-1b", "gemma2-9b", "deepseek-coder-33b",
+              "llama3.2-1b", "qwen1.5-110b", "mixtral-8x22b",
+              "llama4-maverick-400b-a17b", "musicgen-medium",
+              "recurrentgemma-2b", "rwkv6-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> dict:
+    out = {}
+    for f in ART.glob(f"*_{mesh}.json"):
+        r = json.loads(f.read_text())
+        if r.get("tag"):
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def roofline_table() -> None:
+    recs = load("16x16")
+    print("\n| arch | shape | compute ms | memory ms | coll ms | dominant"
+          " | w/kernels mem ms | dom (kernels) | useful | adj peak GB |"
+          " fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                print(f"| {arch} | {shape} | — | — | — | skip | — | — |"
+                      " — | — | — |")
+                continue
+            t, kt = r["terms"], r["kernel_terms"]
+            print(f"| {arch} | {shape} "
+                  f"| {t['compute_s']*1e3:.1f} "
+                  f"| {t['memory_s']*1e3:.1f} "
+                  f"| {t['collective_s']*1e3:.1f} "
+                  f"| {t['dominant']} "
+                  f"| {kt['memory_s']*1e3:.1f} "
+                  f"| {kt['dominant']} "
+                  f"| {t['useful_ratio']:.2f} "
+                  f"| {r['memory']['adjusted_peak_bytes']/1e9:.2f} "
+                  f"| {'Y' if r['fits_16GB'] else 'N'} |")
+
+
+def dryrun_table() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        recs = load(mesh)
+        ok = sum(1 for _ in recs)
+        fits = sum(1 for r in recs.values() if r["fits_16GB"])
+        print(f"\n**{mesh}**: {ok} cells lower+compile OK; "
+              f"{fits}/{ok} fit 16 GB/chip (adjusted).")
+        print("\n| arch | shape | args GB | temp GB | adj peak GB | "
+              "colls | wire GB | compile s |")
+        print("|---|---|---|---|---|---|---|---|")
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                r = recs.get((arch, shape))
+                if r is None:
+                    continue
+                m, h = r["memory"], r["hlo_analysis"]
+                print(f"| {arch} | {shape} "
+                      f"| {m['argument_bytes']/1e9:.2f} "
+                      f"| {m['temp_bytes']/1e9:.2f} "
+                      f"| {m['adjusted_peak_bytes']/1e9:.2f} "
+                      f"| {h['collective_count']} "
+                      f"| {h['collective_bytes']/1e9:.1f} "
+                      f"| {r['compile_s']:.0f} |")
+
+
+if __name__ == "__main__":
+    print("## Generated tables (from artifacts/dryrun)")
+    print("\n### §Dry-run")
+    dryrun_table()
+    print("\n### §Roofline (single-pod 16×16, per-device terms)")
+    roofline_table()

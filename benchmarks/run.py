@@ -1,0 +1,37 @@
+"""Benchmark driver — one section per paper table/figure plus the
+beyond-paper serving benchmark and the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only accuracy,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
+            "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of "
+                    + ",".join(SECTIONS))
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else SECTIONS
+
+    for name in wanted:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        print(f"### bench_{name} "
+              f"{'(paper Table 2)' if name == 'accuracy' else ''}"
+              f"{'(paper Figs 3-4)' if name == 'policies' else ''}"
+              f"{'(paper Table 3)' if name == 'sharing' else ''}"
+              f"{'(paper §5)' if name == 'overhead' else ''}")
+        t0 = time.time()
+        mod.run()
+        print(f"### bench_{name} done in {time.time() - t0:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

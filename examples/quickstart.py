@@ -1,0 +1,49 @@
+"""Quickstart — the paper's contribution in one page.
+
+Builds the Gauss-Seidel task graph (barrier per step ⇒ load imbalance),
+runs it under the four resource-management policies on the MN4 machine
+model, and prints the performance/energy/EDP table (paper Figs. 3-4).
+Then repeats the paper's Table 3 experiment: Gauss-Seidel + STREAM
+sharing cores through the DLB broker, with and without predictions.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import ResourceBroker
+from repro.runtime import MN4, SimCluster, SimExecutor, SimJobSpec
+from repro.workloads import build_gauss_seidel, build_stream
+
+
+def policy_table() -> None:
+    print("=== policies × Gauss-Seidel (MN4, 48 cores) ===")
+    print(f"{'policy':12s} {'time_ms':>9s} {'energy':>8s} {'EDP':>10s} "
+          f"{'resumes':>8s}")
+    for policy in ("busy", "idle", "hybrid", "prediction"):
+        g = build_gauss_seidel(steps=30, seed=0)
+        r = SimExecutor(MN4, policy=policy, monitoring=True).run(g)
+        print(f"{policy:12s} {r.makespan*1e3:9.1f} {r.energy:8.2f} "
+              f"{r.edp:10.4f} {r.resumes:8d}")
+
+
+def sharing_table() -> None:
+    print("\n=== DLB sharing: Gauss-Seidel + STREAM (24+24 cores) ===")
+    print(f"{'policy':16s} {'gauss_ms':>9s} {'stream_ms':>10s} "
+          f"{'DLB calls':>10s}")
+    for policy in ("dlb-lewi", "dlb-hybrid", "dlb-prediction"):
+        broker = ResourceBroker()
+        cl = SimCluster(MN4, broker=broker)
+        cl.add_job(SimJobSpec(name="gauss",
+                              graph=build_gauss_seidel(steps=20, seed=0),
+                              policy=policy, cpus=list(range(24))))
+        cl.add_job(SimJobSpec(name="stream",
+                              graph=build_stream(rounds=10, seed=1),
+                              policy=policy, cpus=list(range(24, 48))))
+        reps = cl.run()
+        print(f"{policy:16s} {reps['gauss'].makespan*1e3:9.1f} "
+              f"{reps['stream'].makespan*1e3:10.1f} "
+              f"{broker.total_calls:10d}")
+
+
+if __name__ == "__main__":
+    policy_table()
+    sharing_table()

@@ -1,0 +1,58 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model
+trained for a few hundred steps on synthetic data, with checkpointing
+and restart support.
+
+    PYTHONPATH=src python examples/train_lm.py             # full run
+    PYTHONPATH=src python examples/train_lm.py --tiny      # CI-sized
+
+Interrupt it and re-run: it restores from the last checkpoint and
+reproduces the uninterrupted loss curve exactly (deterministic data +
+bitwise checkpoints).
+"""
+
+import argparse
+
+from repro.models.config import LayerKind, ModelConfig
+from repro.train.steps import StepConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+#: ~103M params: 12L × d512 (8 heads, GQA kv=4) + 32k vocab
+MODEL_100M = ModelConfig(
+    name="example-100m",
+    n_layers=12, d_model=512, n_heads=8, kv_heads=4, d_ff=2048,
+    vocab=32_000, head_dim=64,
+    pattern=(LayerKind.ATTN,),
+    remat="none",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="2-layer width-64 config for smoke testing")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = MODEL_100M.replace(n_layers=2, d_model=64, n_heads=4,
+                             kv_heads=2, head_dim=16, d_ff=256,
+                             vocab=512) if args.tiny else MODEL_100M
+    total, _ = cfg.param_count()
+    print(f"model: {cfg.name} ({total/1e6:.1f}M params)")
+    tcfg = TrainerConfig(
+        steps=args.steps if not args.tiny else min(args.steps, 30),
+        global_batch=8, seq_len=256 if not args.tiny else 64,
+        checkpoint_dir=args.checkpoint_dir, checkpoint_every=50,
+        log_every=10, step=StepConfig(accum=2, warmup=20))
+    tr = Trainer(cfg, tcfg)
+    if tr.maybe_restore():
+        print(f"restored checkpoint at step {tr.step}")
+    try:
+        hist = tr.run()
+        print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    finally:
+        tr.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing."""
+
+from .manager import CheckpointManager, save_checkpoint, restore_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,174 @@
+"""Sharded checkpointing: npz shards + JSON manifest, atomic commit,
+async background save, elastic re-shard on restore.
+
+Layout::
+
+    <dir>/step_000123/            (atomic: written as .tmp then renamed)
+        manifest.json             tree structure, shapes, dtypes, step
+        shard_0.npz               flattened leaves (host-gathered)
+
+Restore never requires the saving mesh: leaves are loaded on host and
+``jax.device_put`` re-shards them to whatever shardings the caller
+supplies (elastic re-shard — restore on a different mesh/shape is tested
+in ``tests/test_checkpoint.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+
+
+def _flatten(tree) -> tuple[list, object]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+_WIDTH_VIEW = {2: np.uint16, 1: np.uint8, 4: np.uint32, 8: np.uint64}
+
+
+def _to_numpy_storable(h: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz can't serialize ml_dtypes (bfloat16, float8…): store the raw
+    bits as an unsigned view and record the true dtype."""
+    dtype = str(h.dtype)
+    try:
+        np.dtype(dtype)
+        native = h.dtype.kind in "biufc"
+    except TypeError:
+        native = False
+    if native and h.dtype.kind in "biufc" and dtype not in ("bfloat16",):
+        return h, dtype
+    return h.view(_WIDTH_VIEW[h.dtype.itemsize]), dtype
+
+
+def save_checkpoint(directory, step: int, tree) -> pathlib.Path:
+    """Blocking sharded save with atomic rename commit."""
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:09d}"
+    tmp = directory / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(x) for x in leaves]
+    stored = [_to_numpy_storable(h) for h in host]
+    np.savez(tmp / "shard_0.npz",
+             **{f"leaf_{i}": s for i, (s, _) in enumerate(stored)})
+    manifest = {
+        "step": step,
+        "n_leaves": len(host),
+        "treedef": str(treedef),
+        "shapes": [list(h.shape) for h in host],
+        "dtypes": [dt for _, dt in stored],
+        "time": time.time(),
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic commit
+    return final
+
+
+def restore_checkpoint(directory, step: int | None, like_tree,
+                       shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of Shardings — leaves are
+    device_put with them (elastic re-shard); else host arrays are
+    returned in the tree structure.
+    """
+    directory = pathlib.Path(directory)
+    if step is None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in directory.glob("step_*"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+        step = steps[-1]
+    path = directory / f"step_{step:09d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "shard_0.npz")
+    import ml_dtypes
+    leaves = []
+    for i in range(manifest["n_leaves"]):
+        raw = data[f"leaf_{i}"]
+        want = manifest["dtypes"][i]
+        try:
+            dt = np.dtype(want)
+        except TypeError:
+            dt = np.dtype(getattr(ml_dtypes, want))
+        if raw.dtype != dt:
+            raw = raw.view(dt)
+        leaves.append(raw)
+    _, treedef = _flatten(like_tree)
+    like_leaves = treedef.flatten_up_to(like_tree)
+    if len(like_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected "
+            f"{len(like_leaves)}")
+    out = []
+    for i, (h, like) in enumerate(zip(leaves, like_leaves)):
+        arr = h.astype(like.dtype) if hasattr(like, "dtype") else h
+        if shardings is not None:
+            sh = treedef.flatten_up_to(shardings)[i]
+            arr = jax.device_put(arr, sh)
+        out.append(arr)
+    return treedef.unflatten(out), step
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; optional async saves."""
+
+    def __init__(self, directory, keep: int = 3) -> None:
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.saved_steps: list[int] = []
+
+    def save(self, step: int, tree, blocking: bool = True) -> None:
+        if self._thread is not None:
+            self._thread.join()            # one outstanding save at a time
+            self._thread = None
+        # Gather to host synchronously (cheap vs. serialization), then
+        # serialize in the background.
+        leaves, treedef = _flatten(tree)
+        host = treedef.unflatten([np.asarray(x) for x in leaves])
+
+        def work():
+            save_checkpoint(self.directory, step, host)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        self.saved_steps.append(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:09d}",
+                          ignore_errors=True)
+
+    def latest_step(self) -> int | None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*"))
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, shardings=None, step: int | None = None):
+        return restore_checkpoint(self.directory, step, like_tree,
+                                  shardings)

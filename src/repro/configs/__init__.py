@@ -1,0 +1,81 @@
+"""Assigned architectures (``--arch <id>``) + input shapes.
+
+Each module exposes ``CONFIG`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU tests).  The
+``SHAPES`` table defines the four assigned input-shape cells; helpers
+report which (arch × shape) cells are runnable (``long_500k`` needs a
+sub-quadratic decode path — skips are recorded in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from ..models.config import ModelConfig
+
+ARCHS = [
+    "internvl2_1b", "gemma2_9b", "deepseek_coder_33b", "llama3_2_1b",
+    "qwen1_5_110b", "mixtral_8x22b", "llama4_maverick_400b_a17b",
+    "musicgen_medium", "recurrentgemma_2b", "rwkv6_7b",
+]
+
+#: canonical ids (CLI, exactly as assigned) → module names
+ARCH_IDS = {
+    "internvl2-1b": "internvl2_1b",
+    "gemma2-9b": "gemma2_9b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "musicgen-medium": "musicgen_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = ARCH_IDS.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = ARCH_IDS.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{mod}").smoke_config()
+
+
+def cell_runnable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable?, reason-if-not) for an (arch × shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention layers ⇒ 500k KV cache is "
+                       "O(S) per layer; skipped per assignment note")
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            out.append((arch, shape))
+    return out
+
+
+__all__ = ["ARCHS", "ARCH_IDS", "SHAPES", "ShapeSpec", "get_config",
+           "get_smoke_config", "cell_runnable", "all_cells"]

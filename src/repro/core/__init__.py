@@ -1,0 +1,31 @@
+"""The paper's primary contribution: the monitoring + prediction
+infrastructure (§3.1), Algorithm 1 (CPU-utilization prediction),
+Algorithm 2 (the prediction policy in the CPU manager), the baseline
+policies (busy/idle/hybrid) and the DLB-style prediction-based resource
+sharing (§3.3).  Everything here is host-side decision logic; the same
+objects drive the threaded executor, the discrete-event simulator, and the
+distributed elastic controller / serving autoscaler.
+"""
+
+from .cost import CostClause, TaskTypeInfo, TaskTypeRegistry
+from .energy import CoreState, EnergyMeter, PowerModel
+from .manager import WorkerManager, WorkerState
+from .monitoring import EMA, AccuracyReport, TaskMonitor, TypeMetrics
+from .policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
+                       PollDecision, PredictionPolicy, make_policy)
+from .prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
+                         PredictionConfig)
+from .sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
+                      ResourceBroker, SharingPolicy)
+
+__all__ = [
+    "CostClause", "TaskTypeInfo", "TaskTypeRegistry",
+    "CoreState", "EnergyMeter", "PowerModel",
+    "WorkerManager", "WorkerState",
+    "EMA", "AccuracyReport", "TaskMonitor", "TypeMetrics",
+    "BusyPolicy", "HybridPolicy", "IdlePolicy", "Policy", "PollDecision",
+    "PredictionPolicy", "make_policy",
+    "DEFAULT_PREDICTION_RATE_S", "CPUPredictor", "PredictionConfig",
+    "DLBHybridPolicy", "DLBPredictionPolicy", "LeWIPolicy",
+    "ResourceBroker", "SharingPolicy",
+]

@@ -1,0 +1,118 @@
+"""Energy accounting (EDP) — the container has no RAPL, so energy is a
+documented *proxy model* integrated over (virtual or wall) time:
+
+    E = Σ_cores ∫ P(state(t)) dt
+
+with normalized powers ``P_active = P_spin = 1.0`` (busy-waiting burns the
+same cycles as computing — the very premise of the paper's energy argument),
+``P_idle = 0.1`` (sleeping core), ``P_off = 0.0`` (core lent away; the
+borrower accounts for it).  EDP = E · elapsed, matching the paper's
+"energy-delay product correlates both performance and energy consumption
+in only one value".
+
+The proxy preserves the paper's *ordering* of policies by construction:
+busy maximizes active core-seconds, idle minimizes them at the price of
+transition overhead, prediction sits in between.  Absolute Joules are out
+of scope on this host.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+__all__ = ["CoreState", "PowerModel", "EnergyMeter"]
+
+
+class CoreState(enum.Enum):
+    ACTIVE = "active"   # executing a task
+    SPIN = "spin"       # busy-waiting (polls, finds nothing)
+    IDLE = "idle"       # yielded / sleeping
+    OFF = "off"         # lent to another runtime (DLB) or fenced off
+
+
+@dataclass(frozen=True)
+class PowerModel:
+    active: float = 1.0
+    spin: float = 1.0
+    idle: float = 0.1
+    off: float = 0.0
+    #: energy spike charged per idle→active resume (wakeup cost)
+    resume_energy: float = 0.0
+
+    def power(self, state: CoreState) -> float:
+        return {
+            CoreState.ACTIVE: self.active,
+            CoreState.SPIN: self.spin,
+            CoreState.IDLE: self.idle,
+            CoreState.OFF: self.off,
+        }[state]
+
+
+@dataclass
+class _CoreTimeline:
+    state: CoreState
+    since: float
+    accum: dict[CoreState, float] = field(
+        default_factory=lambda: {s: 0.0 for s in CoreState})
+    resumes: int = 0
+
+
+class EnergyMeter:
+    """Integrates per-core state durations; time source is supplied by the
+    executor (virtual time in simulation, ``time.perf_counter`` live)."""
+
+    def __init__(self, n_cores: int, power: PowerModel | None = None,
+                 t0: float = 0.0) -> None:
+        self.power_model = power or PowerModel()
+        self._cores = {i: _CoreTimeline(CoreState.SPIN, t0)
+                       for i in range(n_cores)}
+        self._t0 = t0
+        self._t_end: float | None = None
+
+    def add_core(self, core_id: int, state: CoreState, now: float) -> None:
+        self._cores[core_id] = _CoreTimeline(state, now)
+
+    def set_state(self, core_id: int, state: CoreState, now: float) -> None:
+        tl = self._cores[core_id]
+        if tl.state is state:
+            return
+        tl.accum[tl.state] += max(0.0, now - tl.since)
+        if tl.state is CoreState.IDLE and state in (CoreState.ACTIVE,
+                                                    CoreState.SPIN):
+            tl.resumes += 1
+        tl.state = state
+        tl.since = now
+
+    def finish(self, now: float) -> None:
+        for tl in self._cores.values():
+            tl.accum[tl.state] += max(0.0, now - tl.since)
+            tl.since = now
+        self._t_end = now
+
+    # -- reports ---------------------------------------------------------
+
+    def state_seconds(self) -> dict[CoreState, float]:
+        out = {s: 0.0 for s in CoreState}
+        for tl in self._cores.values():
+            for s, v in tl.accum.items():
+                out[s] += v
+        return out
+
+    def energy(self) -> float:
+        pm = self.power_model
+        acc = self.state_seconds()
+        e = sum(acc[s] * pm.power(s) for s in CoreState)
+        e += pm.resume_energy * sum(tl.resumes for tl in self._cores.values())
+        return e
+
+    def elapsed(self) -> float:
+        if self._t_end is None:
+            raise RuntimeError("EnergyMeter.finish() not called")
+        return self._t_end - self._t0
+
+    def edp(self) -> float:
+        return self.energy() * self.elapsed()
+
+    def resumes(self) -> int:
+        return sum(tl.resumes for tl in self._cores.values())

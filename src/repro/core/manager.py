@@ -1,0 +1,202 @@
+"""The CPU/worker manager — the mechanics side of Algorithm 2.
+
+:class:`WorkerManager` owns the worker state machine (ACTIVE / SPIN / IDLE /
+LENT), the active count ``δ`` and the idle set.  It consults a
+:class:`~repro.core.policies.Policy` for every decision, so the same code
+drives the real :class:`~repro.runtime.thread_executor.ThreadExecutor`, the
+discrete-event :class:`~repro.runtime.sim.SimExecutor` and (with workers
+reinterpreted as device replicas) the distributed
+:class:`~repro.train.elastic.ElasticController`.
+
+The manager is deliberately *passive*: it mutates state and reports which
+workers must be resumed/idled, but the executor owns the actual blocking /
+wakeup primitives (condition variables live, event queue simulated).
+
+All transitions are guarded by one lock; the paper stores ``Δ`` in an atomic
+and updates ``δ`` "in a thread-safe manner" — this lock is that atomicity.
+"""
+
+from __future__ import annotations
+
+import enum
+import threading
+from typing import Callable
+
+from .energy import CoreState, EnergyMeter
+from .policies import Policy, PollDecision
+
+__all__ = ["WorkerState", "WorkerManager"]
+
+
+class WorkerState(enum.Enum):
+    ACTIVE = "active"   # executing a task
+    SPIN = "spin"       # polling for work
+    IDLE = "idle"       # released its CPU (paper: idle(thread))
+    LENT = "lent"       # CPU lent to another runtime via the broker
+
+
+_ENERGY_STATE = {
+    WorkerState.ACTIVE: CoreState.ACTIVE,
+    WorkerState.SPIN: CoreState.SPIN,
+    WorkerState.IDLE: CoreState.IDLE,
+    WorkerState.LENT: CoreState.OFF,
+}
+
+
+class WorkerManager:
+    """Tracks δ (active workers) and applies policy decisions atomically."""
+
+    def __init__(self, n_workers: int, policy: Policy,
+                 clock: Callable[[], float],
+                 energy: EnergyMeter | None = None,
+                 worker_ids: list[int] | None = None) -> None:
+        self.policy = policy
+        self.clock = clock
+        self.energy = energy
+        ids = worker_ids if worker_ids is not None else list(range(n_workers))
+        self._lock = threading.Lock()
+        self._states: dict[int, WorkerState] = {
+            w: WorkerState.SPIN for w in ids}
+        self._spin_counts: dict[int, int] = {w: 0 for w in ids}
+        # Transition counters (observability / paper overhead discussion).
+        self.idles = 0
+        self.resumes = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n_workers(self) -> int:
+        with self._lock:
+            return len(self._states)
+
+    @property
+    def active(self) -> int:
+        """δ — workers currently holding a CPU (executing or spinning)."""
+        with self._lock:
+            return self._active_locked()
+
+    def _active_locked(self) -> int:
+        return sum(1 for s in self._states.values()
+                   if s in (WorkerState.ACTIVE, WorkerState.SPIN))
+
+    @property
+    def idle_workers(self) -> list[int]:
+        with self._lock:
+            return [w for w, s in self._states.items()
+                    if s is WorkerState.IDLE]
+
+    def state(self, worker_id: int) -> WorkerState:
+        with self._lock:
+            return self._states[worker_id]
+
+    def states(self) -> dict[int, WorkerState]:
+        with self._lock:
+            return dict(self._states)
+
+    # -- transitions ---------------------------------------------------------
+
+    def _set(self, worker_id: int, state: WorkerState) -> None:
+        self._states[worker_id] = state
+        if self.energy is not None:
+            self.energy.set_state(worker_id, _ENERGY_STATE[state],
+                                  self.clock())
+
+    def task_started(self, worker_id: int) -> None:
+        with self._lock:
+            self._spin_counts[worker_id] = 0
+            self._set(worker_id, WorkerState.ACTIVE)
+
+    def task_finished(self, worker_id: int) -> None:
+        with self._lock:
+            self._set(worker_id, WorkerState.SPIN)
+
+    def poll_empty(self, worker_id: int,
+                   spin_count_override: int | None = None) -> PollDecision:
+        """Worker polled, queue empty — Alg. 2 lines 2–10.
+
+        Returns the decision; IDLE/LEND transitions are applied (δ
+        decremented) before returning, so a concurrent poller sees the
+        updated δ.  ``spin_count_override`` lets the discrete-event
+        simulator fast-forward a spin budget (N empty polls collapse into
+        one event) without emitting N calls.
+        """
+        with self._lock:
+            if spin_count_override is not None:
+                self._spin_counts[worker_id] = spin_count_override
+            else:
+                self._spin_counts[worker_id] += 1
+            decision = self.policy.on_poll_empty(
+                worker_id, self._active_locked(),
+                self._spin_counts[worker_id])
+            if decision is PollDecision.IDLE:
+                self._set(worker_id, WorkerState.IDLE)
+                self._spin_counts[worker_id] = 0
+                self.idles += 1
+            elif decision is PollDecision.LEND:
+                self._set(worker_id, WorkerState.LENT)
+                self._spin_counts[worker_id] = 0
+            return decision
+
+    def notify_added(self, ready_tasks: int) -> list[int]:
+        """Tasks were added — Alg. 2 lines 11–19.
+
+        Returns the worker ids transitioned IDLE → SPIN; the executor must
+        actually wake them (condition variable / sim event).
+        """
+        with self._lock:
+            idle = [w for w, s in self._states.items()
+                    if s is WorkerState.IDLE]
+            n = self.policy.workers_to_resume(
+                self._active_locked(), len(idle), ready_tasks)
+            woken = idle[:max(0, n)]
+            for w in woken:
+                self._set(w, WorkerState.SPIN)
+                self._spin_counts[w] = 0
+                self.resumes += 1
+            return woken
+
+    def reevaluate_spinners(self) -> list[int]:
+        """After a prediction tick lowered Δ, ask the policy about every
+        spinning worker again (the paper's threads re-check ``δ > Δ`` on
+        their next poll; in the simulator this is the equivalent hook).
+
+        Returns workers transitioned SPIN → IDLE.
+        """
+        idled = []
+        with self._lock:
+            for w, s in list(self._states.items()):
+                if s is not WorkerState.SPIN:
+                    continue
+                decision = self.policy.on_poll_empty(
+                    w, self._active_locked(), self._spin_counts[w])
+                if decision is PollDecision.IDLE:
+                    self._set(w, WorkerState.IDLE)
+                    self.idles += 1
+                    idled.append(w)
+                elif decision is PollDecision.LEND:
+                    self._set(w, WorkerState.LENT)
+                    idled.append(w)
+        return idled
+
+    # -- broker hooks (DLB) ---------------------------------------------------
+
+    def add_worker(self, worker_id: int) -> None:
+        """A borrowed CPU arrived from the broker; it starts spinning."""
+        with self._lock:
+            self._states[worker_id] = WorkerState.SPIN
+            self._spin_counts[worker_id] = 0
+            if self.energy is not None:
+                self.energy.add_core(worker_id, CoreState.SPIN, self.clock())
+
+    def remove_worker(self, worker_id: int) -> None:
+        """A borrowed CPU was reclaimed by its owner."""
+        with self._lock:
+            self._states.pop(worker_id, None)
+            self._spin_counts.pop(worker_id, None)
+
+    def reclaim(self, worker_id: int) -> None:
+        """Owner got its lent CPU back (LENT → SPIN)."""
+        with self._lock:
+            if self._states.get(worker_id) is WorkerState.LENT:
+                self._set(worker_id, WorkerState.SPIN)
+                self._spin_counts[worker_id] = 0

@@ -1,0 +1,272 @@
+"""Monitoring infrastructure (paper §3.1, Fig. 2).
+
+Tracks, per task type ``j``:
+
+* the **unitary cost** ``α_j`` — an exponentially-weighted average of
+  ``measured_time / cost`` over completed instances (rolling window that
+  weights recent samples more, per the paper);
+* the **workload accounting** ``W_{i,j}`` — the accumulated *cost* of live
+  instances per runtime status ``i ∈ {ready, executing}``;
+* the **instance counts** ``M_j`` of live instances;
+* **prediction accuracy** statistics (paper Table 2).
+
+Executing tasks must not account for their whole predicted time once they
+are deep into their execution; the paper handles this through the
+parent–child link: when a child finishes, its measured time is subtracted
+from the parent's outstanding predicted time.  We implement the same
+mechanism (``on_task_completed`` walks the parent link).
+
+Thread-safety: events are aggregated per *worker* into local buffers and
+flushed into the shared aggregates at task-completion boundaries, mirroring
+the paper's "outside the critical path" design.  A single lock guards the
+shared aggregates; buffers keep the lock hold time O(1) per task.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass, field
+
+__all__ = [
+    "EMA",
+    "TypeMetrics",
+    "TaskMonitor",
+    "AccuracyReport",
+]
+
+
+class EMA:
+    """Exponential moving average with sample-count warmup.
+
+    The paper: "normalized metrics are computed using a rolling window,
+    which weights past metrics by their occurrence — the more recent these
+    previous metrics are, the more weight they have".  During warmup
+    (< ``warmup`` samples) we use the plain mean so the very first noisy
+    samples do not dominate.
+    """
+
+    __slots__ = ("decay", "warmup", "_value", "_count", "_mean", "_m2")
+
+    def __init__(self, decay: float = 0.25, warmup: int = 8) -> None:
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.decay = decay
+        self.warmup = warmup
+        self._value: float = 0.0
+        self._count: int = 0
+        self._mean: float = 0.0  # running mean (also feeds variance)
+        self._m2: float = 0.0
+
+    def update(self, sample: float) -> None:
+        self._count += 1
+        delta = sample - self._mean
+        self._mean += delta / self._count
+        self._m2 += delta * (sample - self._mean)
+        if self._count <= self.warmup:
+            self._value = self._mean
+        else:
+            self._value += self.decay * (sample - self._value)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def stddev(self) -> float:
+        if self._count < 2:
+            return 0.0
+        return math.sqrt(self._m2 / (self._count - 1))
+
+    def reliable(self, min_samples: int) -> bool:
+        return self._count >= min_samples
+
+
+@dataclass
+class TypeMetrics:
+    """Aggregated metrics for one task type (the ``j`` index of Alg. 1)."""
+
+    name: str
+    unitary_cost: EMA = field(default_factory=EMA)
+    # Live workload accounting, in *cost units* (multiplied by α_j on read).
+    ready_cost: float = 0.0
+    executing_cost: float = 0.0
+    ready_instances: int = 0
+    executing_instances: int = 0
+    # Accuracy accounting (paper Table 2).
+    acc_sum: float = 0.0
+    acc_count: int = 0
+    completed: int = 0
+
+    @property
+    def live_instances(self) -> int:
+        return self.ready_instances + self.executing_instances
+
+    @property
+    def live_cost(self) -> float:
+        return self.ready_cost + self.executing_cost
+
+
+@dataclass(frozen=True)
+class AccuracyReport:
+    """Per-type and overall prediction accuracy (reproduces Table 2)."""
+
+    per_type: dict[str, tuple[int, float]]  # type -> (#instances, avg %)
+    instances: int
+    average_pct: float | None  # None ⇔ "NA" (no timing predictions made)
+
+
+class TaskMonitor:
+    """The shared monitoring module (paper Fig. 2, left box)."""
+
+    def __init__(self, decay: float = 0.25, warmup: int = 8,
+                 min_samples: int = 4) -> None:
+        self._lock = threading.Lock()
+        self._types: dict[str, TypeMetrics] = {}
+        self._decay = decay
+        self._warmup = warmup
+        self.min_samples = min_samples
+        # Outstanding *predicted seconds* per live task id — used for the
+        # parent–child subtraction and for accuracy accounting.
+        self._outstanding: dict[int, float] = {}
+        self._predicted_at_start: dict[int, float] = {}
+
+    # -- type helpers ------------------------------------------------------
+
+    def _metrics(self, type_name: str) -> TypeMetrics:
+        m = self._types.get(type_name)
+        if m is None:
+            m = TypeMetrics(name=type_name,
+                            unitary_cost=EMA(self._decay, self._warmup))
+            self._types[type_name] = m
+        return m
+
+    def type_names(self) -> list[str]:
+        with self._lock:
+            return list(self._types)
+
+    # -- lifecycle events --------------------------------------------------
+    # Event methods take (task_id, type_name, cost) rather than a Task
+    # object so the monitor has no dependency on the runtime layer.
+
+    def on_task_ready(self, task_id: int, type_name: str, cost: float) -> None:
+        """Task became ready (dependencies satisfied / created ready)."""
+        with self._lock:
+            m = self._metrics(type_name)
+            m.ready_cost += cost
+            m.ready_instances += 1
+            # Record the prediction that Alg. 1 would make for this task
+            # right now; accuracy is evaluated against it on completion.
+            if m.unitary_cost.reliable(self.min_samples):
+                predicted = cost * m.unitary_cost.value
+                self._outstanding[task_id] = predicted
+                self._predicted_at_start[task_id] = predicted
+
+    def on_task_execute(self, task_id: int, type_name: str, cost: float) -> None:
+        """Task moved ready → executing."""
+        with self._lock:
+            m = self._metrics(type_name)
+            m.ready_cost -= cost
+            m.ready_instances -= 1
+            m.executing_cost += cost
+            m.executing_instances += 1
+
+    def on_task_completed(self, task_id: int, type_name: str, cost: float,
+                          elapsed: float,
+                          parent_id: int | None = None) -> None:
+        """Task finished; fold the measured time into the aggregates."""
+        with self._lock:
+            m = self._metrics(type_name)
+            m.executing_cost -= cost
+            m.executing_instances -= 1
+            m.completed += 1
+            if elapsed > 0.0 and cost > 0.0:
+                m.unitary_cost.update(elapsed / cost)
+            # Accuracy (Table 2): compare against prediction-at-ready.
+            predicted = self._predicted_at_start.pop(task_id, None)
+            self._outstanding.pop(task_id, None)
+            if predicted is not None and predicted > 0.0 and elapsed > 0.0:
+                acc = 100.0 * (1.0 - abs(predicted - elapsed)
+                               / max(predicted, elapsed))
+                m.acc_sum += acc
+                m.acc_count += 1
+            # Parent–child link: the child's measured time no longer
+            # belongs to the parent's outstanding predicted time.
+            if parent_id is not None and parent_id in self._outstanding:
+                self._outstanding[parent_id] = max(
+                    0.0, self._outstanding[parent_id] - elapsed)
+
+    # -- snapshot for the predictor (Alg. 1 inputs) --------------------------
+
+    def workload_snapshot(self, min_samples: int | None = None) -> list[
+            tuple[str, float, float, int, bool]]:
+        """Return ``[(type, W_ready+W_exec (cost units), α_j, M_j, reliable)]``.
+
+        ``reliable`` is False while a type has too few completed samples to
+        trust its unitary cost — Alg. 1 then falls back to counting tasks
+        (the paper's "go-to approach when task timing predictions are not
+        available").
+        """
+        k = self.min_samples if min_samples is None else min_samples
+        out = []
+        with self._lock:
+            for name, m in self._types.items():
+                if m.live_instances <= 0:
+                    continue
+                out.append((
+                    name,
+                    m.live_cost,
+                    m.unitary_cost.value,
+                    m.live_instances,
+                    m.unitary_cost.reliable(k),
+                ))
+        return out
+
+    def outstanding_seconds(self, min_samples: int | None = None) -> tuple[float, int, int]:
+        """Aggregate (predicted_seconds, live_instances, unreliable_instances).
+
+        ``predicted_seconds`` covers only types with reliable α_j.
+        """
+        pred = 0.0
+        live = 0
+        unreliable = 0
+        for _, w, alpha, m_j, ok in self.workload_snapshot(min_samples):
+            live += m_j
+            if ok:
+                pred += w * alpha
+            else:
+                unreliable += m_j
+        return pred, live, unreliable
+
+    # -- reporting -----------------------------------------------------------
+
+    def unitary_cost(self, type_name: str) -> float | None:
+        with self._lock:
+            m = self._types.get(type_name)
+            if m is None or m.unitary_cost.count == 0:
+                return None
+            return m.unitary_cost.value
+
+    def accuracy_report(self) -> AccuracyReport:
+        with self._lock:
+            per_type: dict[str, tuple[int, float]] = {}
+            total_acc = 0.0
+            total_n = 0
+            for name, m in self._types.items():
+                if m.acc_count:
+                    per_type[name] = (m.acc_count, m.acc_sum / m.acc_count)
+                    total_acc += m.acc_sum
+                    total_n += m.acc_count
+            return AccuracyReport(
+                per_type=per_type,
+                instances=total_n,
+                average_pct=(total_acc / total_n) if total_n else None,
+            )
+
+    def completed_instances(self) -> int:
+        with self._lock:
+            return sum(m.completed for m in self._types.values())

@@ -1,0 +1,187 @@
+"""Resource-management policies (paper §2, §3.2 — Algorithm 2).
+
+A policy decides what a worker does when it polls for work and finds none
+(``on_poll_empty``) and whether sleeping workers should be woken when new
+work arrives (``workers_to_resume``).  The mechanics of idling/resuming are
+owned by the executor's :class:`~repro.core.manager.WorkerManager`; policies
+are pure decision logic so the same implementations drive the real threaded
+executor, the discrete-event simulator, and the distributed elastic
+controller.
+
+Implemented policies:
+
+* ``busy``        — OpenMP *active* / OmpSs-2 *busy*: spin forever.
+* ``idle``        — OpenMP *passive* / OmpSs-2 *idle*: sleep immediately;
+                    woken whenever tasks are added.
+* ``hybrid``      — spin for a fixed budget, then sleep (OpenMP
+                    ``OMP_WAIT_POLICY`` tuning).
+* ``prediction``  — the paper's policy (Alg. 2): sleep only when the active
+                    count δ exceeds the predicted optimum Δ; wake only while
+                    δ < Δ.
+"""
+
+from __future__ import annotations
+
+import enum
+from abc import ABC, abstractmethod
+
+from .prediction import CPUPredictor
+
+__all__ = [
+    "PollDecision",
+    "Policy",
+    "BusyPolicy",
+    "IdlePolicy",
+    "HybridPolicy",
+    "PredictionPolicy",
+    "make_policy",
+]
+
+
+class PollDecision(enum.Enum):
+    SPIN = "spin"    # keep burning cycles, poll again
+    IDLE = "idle"    # release the CPU until resumed
+    LEND = "lend"    # give the CPU to the resource broker (sharing mode)
+
+
+class Policy(ABC):
+    """Decision logic consulted by executors.
+
+    ``active``/``idle`` counts are supplied by the caller (they are owned
+    by the worker manager and updated atomically there).
+    """
+
+    name: str = "abstract"
+    #: whether the executor should drive predictor ticks for this policy
+    uses_predictions: bool = False
+
+    @abstractmethod
+    def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
+                      ) -> PollDecision:
+        """Worker ``worker_id`` polled and the ready queue was empty.
+
+        ``active`` is the current number of non-idle workers (δ);
+        ``spin_count`` how many consecutive empty polls this worker has
+        made since it last executed a task.
+        """
+
+    @abstractmethod
+    def workers_to_resume(self, active: int, idle: int, ready_tasks: int,
+                          ) -> int:
+        """How many idle workers to wake after tasks were added.
+
+        ``idle`` is the number of currently-sleeping workers and
+        ``ready_tasks`` the number of tasks now ready.
+        """
+
+    def on_prediction_tick(self) -> None:  # pragma: no cover - default no-op
+        """Called by the executor at the prediction rate (if enabled)."""
+
+
+class BusyPolicy(Policy):
+    name = "busy"
+
+    def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
+                      ) -> PollDecision:
+        return PollDecision.SPIN
+
+    def workers_to_resume(self, active: int, idle: int, ready_tasks: int,
+                          ) -> int:
+        # Nothing ever sleeps under busy, but if the executor started some
+        # workers idle, wake everything.
+        return idle
+
+
+class IdlePolicy(Policy):
+    """Sleep on the first empty poll; wake (up to one worker per ready
+    task) whenever work is added — OmpSs-2's idle policy is reactive:
+    "as tasks are created, threads are resumed so they may poll once
+    again"."""
+
+    name = "idle"
+
+    def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
+                      ) -> PollDecision:
+        return PollDecision.IDLE
+
+    def workers_to_resume(self, active: int, idle: int, ready_tasks: int,
+                          ) -> int:
+        return min(idle, max(0, ready_tasks - active))
+
+
+class HybridPolicy(Policy):
+    """Spin for ``spin_budget`` consecutive empty polls, then idle.
+
+    The budget is the static user-chosen rate the paper criticizes ("the
+    chosen rate is a static value that cannot be changed at run-time").
+    """
+
+    name = "hybrid"
+
+    def __init__(self, spin_budget: int = 100) -> None:
+        if spin_budget < 1:
+            raise ValueError("spin_budget must be >= 1")
+        self.spin_budget = spin_budget
+
+    def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
+                      ) -> PollDecision:
+        if spin_count < self.spin_budget:
+            return PollDecision.SPIN
+        return PollDecision.IDLE
+
+    def workers_to_resume(self, active: int, idle: int, ready_tasks: int,
+                          ) -> int:
+        return min(idle, max(0, ready_tasks - active))
+
+
+class PredictionPolicy(Policy):
+    """The paper's policy — Algorithm 2.
+
+    * Poll-empty + ``δ > Δ``  → idle this worker (δ is decremented by the
+      manager as part of the idle transition).
+    * Poll-empty + ``δ ≤ Δ``  → keep spinning (the prediction says this
+      CPU will be needed within the next window).
+    * Tasks added + ``δ < Δ`` → resume ``Δ − δ`` workers.
+
+    Δ is refreshed by :meth:`on_prediction_tick` at the prediction rate
+    ``f`` and read from the predictor's atomic.
+    """
+
+    name = "prediction"
+    uses_predictions = True
+
+    def __init__(self, predictor: CPUPredictor) -> None:
+        self.predictor = predictor
+
+    def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
+                      ) -> PollDecision:
+        if active > self.predictor.delta:
+            return PollDecision.IDLE
+        return PollDecision.SPIN
+
+    def workers_to_resume(self, active: int, idle: int, ready_tasks: int,
+                          ) -> int:
+        want = self.predictor.delta - active
+        if want <= 0:
+            return 0
+        return min(idle, want, ready_tasks)
+
+    def on_prediction_tick(self) -> None:
+        self.predictor.tick()
+
+
+def make_policy(name: str, predictor: CPUPredictor | None = None,
+                spin_budget: int = 100) -> Policy:
+    """Factory used by configs / CLI (``--policy``)."""
+    if name == "busy":
+        return BusyPolicy()
+    if name == "idle":
+        return IdlePolicy()
+    if name == "hybrid":
+        return HybridPolicy(spin_budget=spin_budget)
+    if name == "prediction":
+        if predictor is None:
+            raise ValueError("prediction policy needs a CPUPredictor")
+        return PredictionPolicy(predictor)
+    raise ValueError(f"unknown policy {name!r} "
+                     "(expected busy|idle|hybrid|prediction)")

@@ -1,0 +1,114 @@
+"""Algorithm 1 — predicting the optimal CPU utilization ``Δ`` (paper §3.1).
+
+Given the per-type live workload ``W_{ready,j} + W_{exec,j}`` (in cost
+units), the unitary costs ``α_j`` (seconds per cost unit) and the prediction
+rate ``f`` (seconds between predictions), accumulate
+
+    γ ← Σ_j (W_{ready,j} + W_{exec,j}) · α_j / f
+
+over task types, early-exiting once ``γ ≥ N_CPUs`` (the paper's
+``while (γ < N_CPUs)`` loop), then
+
+    Δ = min(⌈γ⌉, Σ_j M_j)   with   0 < Δ ≤ N_CPUs.
+
+Types whose ``α_j`` is not yet reliable contribute their *instance count*
+instead — the paper's fallback "when task timing predictions are not
+available, CPU utilization predictions are based only on the number of
+available tasks" (used throughout for coarse-grained Cholesky).
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+
+from .monitoring import TaskMonitor
+
+__all__ = ["PredictionConfig", "CPUPredictor"]
+
+#: Paper §5: "Throughout the whole evaluation we used the same prediction
+#: rate — f in Algorithm 1 — of 50 µs."
+DEFAULT_PREDICTION_RATE_S = 50e-6
+
+
+@dataclass(frozen=True)
+class PredictionConfig:
+    rate_s: float = DEFAULT_PREDICTION_RATE_S
+    #: below this many completed samples a type's α_j is not trusted
+    min_samples: int = 4
+    #: force the count-based fallback for *all* types (coarse-grained mode)
+    count_based_only: bool = False
+    #: allow Δ above the locally-owned CPUs (used by the DLB-prediction
+    #: sharing policy, which may acquire external CPUs — paper §3.3:
+    #: "slightly modified to allow a superior number of CPUs")
+    allow_oversubscription: bool = False
+    #: cap on Δ in oversubscription mode, as a multiple of owned CPUs
+    #: (a DLB deployment cannot hold more than the machine's cores; we
+    #: default to the two-NUMA-node arrangement of the paper's Table 3)
+    oversubscription_cap: float = 2.0
+
+
+class CPUPredictor:
+    """Computes and caches ``Δ``; thread-safe.
+
+    The executor (real or simulated) calls :meth:`tick` every ``rate_s``
+    seconds; policies read :attr:`delta` (the paper stores Δ in an atomic
+    variable read by the CPU manager, Alg. 2).
+    """
+
+    def __init__(self, monitor: TaskMonitor, n_cpus: int,
+                 config: PredictionConfig | None = None) -> None:
+        if n_cpus <= 0:
+            raise ValueError("n_cpus must be positive")
+        self.monitor = monitor
+        self.n_cpus = n_cpus
+        self.config = config or PredictionConfig()
+        self._delta = n_cpus  # optimistic start: all CPUs
+        self._lock = threading.Lock()
+        self.predictions_made = 0
+
+    # -- Algorithm 1 ---------------------------------------------------------
+
+    def compute_delta(self, n_cpus: int | None = None) -> int:
+        """One evaluation of Algorithm 1 against the monitor's snapshot."""
+        cfg = self.config
+        n = self.n_cpus if n_cpus is None else n_cpus
+        gamma = 0.0
+        total_instances = 0
+        snapshot = self.monitor.workload_snapshot(cfg.min_samples)
+        for _name, w_cost, alpha, m_j, reliable in snapshot:
+            total_instances += m_j
+            if gamma >= n and not cfg.allow_oversubscription:
+                # paper's early exit: while (γ < N_CPUs)
+                continue
+            if cfg.count_based_only or not reliable:
+                # count-based fallback: one CPU's worth per ready task
+                gamma += m_j
+            else:
+                gamma += (w_cost * alpha) / cfg.rate_s
+        if total_instances == 0:
+            # No live work: keep one CPU awake to pick up new work
+            # (Alg. 1 ensures 0 < Δ).
+            return 1
+        delta = min(math.ceil(gamma), total_instances)
+        if cfg.allow_oversubscription:
+            delta = min(delta, int(cfg.oversubscription_cap * n))
+        else:
+            delta = min(delta, n)
+        return max(1, delta)
+
+    # -- atomic Δ (read by Alg. 2) --------------------------------------------
+
+    def tick(self) -> int:
+        """Recompute Δ (called at the prediction rate) and publish it."""
+        delta = self.compute_delta()
+        with self._lock:
+            self._delta = delta
+            self.predictions_made += 1
+        return delta
+
+    @property
+    def delta(self) -> int:
+        with self._lock:
+            return self._delta

@@ -1,0 +1,5 @@
+"""Data pipeline."""
+
+from .synthetic import SyntheticLM, Batch
+
+__all__ = ["SyntheticLM", "Batch"]

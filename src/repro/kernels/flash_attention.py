@@ -1,0 +1,145 @@
+"""Flash attention (causal GQA, sliding-window, softcap) as a Pallas TPU
+kernel.
+
+TPU adaptation of the flash-2 schedule: the grid's trailing dimension
+iterates KV blocks *sequentially* (TPU grid semantics), so the online-
+softmax state (running max ``m``, denominator ``l``, accumulator ``acc``)
+lives in VMEM scratch across KV steps and the scores tile never touches
+HBM.  HBM traffic is Q/K/V/O only — vs. the O(S²) score round-trips of
+the unfused XLA path (see EXPERIMENTS.md §Perf, iteration 1).
+
+Block sizes default to (128, 512): the q-tile rows map onto the MXU's
+128-lane systolic dimension and the 512-deep kv tile amortizes the
+softmax renormalization; (Bq · D + Bk · D · 2 + Bq · Bk) fp32 tiles fit
+comfortably in ~1 MB of VMEM per program.
+
+Causal / windowed blocks that cannot contribute are skipped via
+``pl.when`` (they still occupy grid steps; the index map is dense — a
+documented simplification vs. a banded grid).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, softcap: float | None, window: int | None,
+            block_q: int, block_k: int, n_kv: int):
+    iq = pl.program_id(3)
+    ik = pl.program_id(4)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causality: the block contributes iff its first kv position can be
+    # seen by the last q position (and, windowed, iff its last kv position
+    # is within reach of the first q position).
+    relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0, 0].astype(jnp.float32)       # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (Bq, Bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (Bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (Bq, Bk)
+        corr = jnp.exp(m_prev - m_new)               # (Bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int | None = None,
+                    softcap: float | None = None,
+                    block_q: int = 128, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, KV, D) → (B, S, H, D).
+
+    Causal; ``window`` enables sliding-window masking; ``softcap``
+    applies tanh score capping (gemma2).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = 1.0 / math.sqrt(D)
+    n_q = S // block_q
+    n_kv = S // block_k
+
+    # layout: q (B, KV, G, S, D); k/v (B, KV, S, D)
+    qt = q.reshape(B, S, KV, G, D).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, KV, G, n_q, n_kv)
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, window=window,
+        block_q=block_q, block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, D),
+                         lambda b, kh, g, iq, ik: (b, kh, g, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, kh, g, iq, ik: (b, kh, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, kh, g, iq, ik: (b, kh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block_q, D),
+                               lambda b, kh, g, iq, ik: (b, kh, g, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, S, D), q.dtype),
+        scratch_shapes=[
+            # VMEM accumulators persisting across the sequential kv dim
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)

@@ -1,0 +1,45 @@
+"""jit'd wrappers over the Pallas kernels with implementation dispatch.
+
+``impl`` values:
+  "xla"       — pure-jnp fallback (works everywhere; used by the CPU
+                dry-run and the default model paths)
+  "pallas"    — the TPU kernel (requires TPU hardware)
+  "interpret" — the kernel body interpreted in Python (CPU correctness
+                validation; what the oracle tests run)
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention
+from .rglru import rglru_scan_kernel
+from .rwkv6 import wkv6
+
+__all__ = ["attention", "wkv", "rglru"]
+
+
+def attention(q, k, v, *, window=None, softcap=None, impl: str = "xla",
+              block_q: int = 128, block_k: int = 512):
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, window=window, softcap=softcap)
+    return flash_attention(q, k, v, window=window, softcap=softcap,
+                           block_q=block_q, block_k=block_k,
+                           interpret=(impl == "interpret"))
+
+
+def wkv(r, k, v, w, u, s0=None, *, impl: str = "xla", chunk: int = 32):
+    if impl == "xla":
+        return ref.wkv6_ref(r, k, v, w, u, s0)
+    return wkv6(r, k, v, w, u, s0, chunk=chunk,
+                interpret=(impl == "interpret"))
+
+
+def rglru(a, b, h0=None, *, impl: str = "xla", t_blk: int = 256,
+          r_blk: int = 512):
+    if impl == "xla":
+        h = ref.rglru_ref(a, b, h0)
+        return h, h[:, -1]
+    return rglru_scan_kernel(a, b, h0, t_blk=t_blk, r_blk=r_blk,
+                             interpret=(impl == "interpret"))

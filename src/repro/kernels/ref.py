@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for the interpret-mode kernel tests
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+They are deliberately simple — O(S²) attention, step-by-step scans —
+and are NOT used on the hot path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["attention_ref", "wkv6_ref", "rglru_ref"]
+
+
+def attention_ref(q, k, v, *, window: int | None = None,
+                  softcap: float | None = None) -> jax.Array:
+    """Causal GQA attention, full materialized scores.
+
+    q: (B, S, H, D); k, v: (B, S, K, D).  fp32 math, returns q.dtype.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / math.sqrt(D)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)
+    mask = pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """RWKV-6 WKV, step-by-step.  r,k,v,w: (B,H,S,N); u: (H,N).
+
+    Returns (y (B,H,S,N) f32, s_final (B,H,N,N) f32).
+    """
+    B, H, S, N = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       s + u[None, :, :, None] * kv)
+        return wt[..., :, None] * s + kv, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, w))
+    s_fin, ys = lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin
+
+
+def rglru_ref(a, b, h0=None):
+    """h_t = a_t · h_{t-1} + b_t, step-by-step.  a, b: (B, S, R)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = lax.scan(step, h0,
+                     (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

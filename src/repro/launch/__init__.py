@@ -1,0 +1,2 @@
+"""Launch tier: production meshes, per-cell jit wiring, the multi-pod
+dry-run driver and the roofline analyzer."""

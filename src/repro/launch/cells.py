@@ -1,0 +1,216 @@
+"""Wire an (arch × shape × mesh) cell into a jit-able function plus
+ShapeDtypeStruct inputs (weak-type-correct, shardable, no allocation).
+
+``build_cell`` is what both the dry-run driver and the roofline analyzer
+consume.  Per-arch training knobs (gradient-accumulation depth, gradient /
+optimizer state dtypes) live in ``TRAIN_KNOBS`` — chosen so every cell's
+parameters + optimizer states + scan residuals fit a 16 GB v5e chip
+(verified via ``compiled.memory_analysis()``; see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ShapeSpec, cell_runnable, get_config
+from ..models import (ModelConfig, Rules, cache_specs, init_cache,
+                      init_params, param_specs, prefill)
+from ..optim import AdamWConfig, adamw_init
+from ..train.steps import StepConfig, make_serve_step, make_train_step
+from .mesh import rules_for_mesh
+
+__all__ = ["SkipCell", "CellSpec", "build_cell", "TRAIN_KNOBS"]
+
+
+class SkipCell(Exception):
+    """Raised when an (arch × shape) cell is N/A (reason in args[0])."""
+
+
+@dataclass(frozen=True)
+class TrainKnobs:
+    accum: int = 1
+    grad_dtype: str = "float32"
+    opt_dtype: str = "float32"
+    ce_seq_chunk: int = 512
+
+
+TRAIN_KNOBS: dict[str, TrainKnobs] = {
+    "internvl2-1b": TrainKnobs(accum=1),
+    "gemma2-9b": TrainKnobs(accum=2),
+    "deepseek-coder-33b": TrainKnobs(accum=8),
+    "llama3.2-1b": TrainKnobs(accum=1),
+    "qwen1.5-110b": TrainKnobs(accum=16),
+    "mixtral-8x22b": TrainKnobs(accum=8),
+    "llama4-maverick-400b-a17b": TrainKnobs(
+        accum=8, grad_dtype="bfloat16", opt_dtype="bfloat16"),
+    "musicgen-medium": TrainKnobs(accum=4),
+    "recurrentgemma-2b": TrainKnobs(accum=2),
+    "rwkv6-7b": TrainKnobs(accum=4),
+}
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Any                 # jit-able python callable
+    args: tuple             # ShapeDtypeStructs (positional)
+    donate: tuple[int, ...]
+    kind: str               # train | prefill | decode
+    static_notes: dict
+
+
+def _sds(shapes, specs, mesh):
+    def mk(s, spec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, shapes, specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.ShapeDtypeStruct))
+
+
+def _batch_spec(n: int, mesh, rules: Rules, extra_dims: int,
+                lead: tuple = ()) -> P:
+    """Batch sharding, falling back to replication when not divisible."""
+    total = 1
+    for a in rules.batch:
+        total *= mesh.shape[a]
+    first = rules.batch if n % total == 0 else None
+    return P(*lead, first, *([None] * extra_dims))
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               cfg_overrides: dict | None = None,
+               rules_overrides: dict | None = None,
+               knobs: TrainKnobs | None = None,
+               cache_shard: str = "seq") -> CellSpec:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    rules = rules_for_mesh(mesh, rules_overrides)
+    knobs = knobs or TRAIN_KNOBS[arch]
+    if shape.kind == "train":
+        cfg = cfg.replace(ce_seq_chunk=knobs.ce_seq_chunk)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    ok, why = cell_runnable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+
+    tp = mesh.shape["model"]
+    pspecs = param_specs(cfg, rules, tp)
+    p_shapes = jax.eval_shape(partial(init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    params_in = _sds(p_shapes, pspecs, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    F = cfg.frontend_len
+    S_tok = S - F
+    n_batch = 1
+    for a in rules.batch:
+        n_batch *= mesh.shape[a]
+    notes = {"tp": tp, "batch_devices": n_batch}
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(state_dtype=knobs.opt_dtype)
+        # cap accumulation so the microbatch still spans the batch
+        # devices (multi-pod has 2× the devices — and 2× the memory)
+        A = min(knobs.accum, max(1, B // notes["batch_devices"]))
+        step_cfg = StepConfig(accum=A, grad_dtype=knobs.grad_dtype)
+        assert B % A == 0, (B, A)
+        mB = B // A
+        o_shapes = jax.eval_shape(partial(adamw_init, cfg=opt_cfg),
+                                  p_shapes)
+        from ..optim.adamw import opt_state_specs
+        opt_in = _sds(o_shapes, opt_state_specs(pspecs), mesh)
+        bspec = _batch_spec(mB, mesh, rules, 1, lead=(None,))
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(
+                (A, mB, S_tok), jnp.int32,
+                sharding=NamedSharding(mesh, bspec)),
+            "labels": jax.ShapeDtypeStruct(
+                (A, mB, S), jnp.int32,
+                sharding=NamedSharding(mesh, bspec)),
+        }
+        if F:
+            pfspec = _batch_spec(mB, mesh, rules, 2, lead=(None,))
+            batch["prefix"] = jax.ShapeDtypeStruct(
+                (A, mB, F, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, pfspec))
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        fn = make_train_step(cfg, rules, opt_cfg, step_cfg)
+        notes["accum"] = A
+        notes["micro_batch"] = mB
+        return CellSpec(arch, shape, cfg, fn,
+                        (params_in, opt_in, step, batch), (0, 1),
+                        "train", notes)
+
+    if shape.kind == "prefill":
+        bspec = _batch_spec(B, mesh, rules, 1)
+        tokens = jax.ShapeDtypeStruct(
+            (B, S_tok), jnp.int32, sharding=NamedSharding(mesh, bspec))
+        args = [params_in, tokens]
+        if F:
+            pf = jax.ShapeDtypeStruct(
+                (B, F, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, _batch_spec(B, mesh, rules, 2)))
+            args.append(pf)
+
+            def fn(params, tokens, prefix):
+                return prefill(params, tokens, cfg, rules, max_len=S,
+                               prefix=prefix)
+        else:
+            def fn(params, tokens):
+                return prefill(params, tokens, cfg, rules, max_len=S)
+        return CellSpec(arch, shape, cfg, fn, tuple(args), (),
+                        "prefill", notes)
+
+    # decode: one new token against a seq_len-deep cache
+    c_shapes = jax.eval_shape(partial(init_cache, cfg, B, S))
+
+    def _cache_spec(leaf):
+        # Shard the batch dim wherever it sits: stacked block caches are
+        # (n_units, B, …), remainder-layer caches are (B, …).  The cache
+        # *sequence* dim additionally shards over the model axis
+        # (context-parallel decode): scores/PV contractions over the
+        # sharded kv sequence become GSPMD psums, and a 32k×128-batch
+        # cache (e.g. llama4: 824 GB) fits per-device HBM.
+        dims = leaf.shape
+        spec: list = [None] * len(dims)
+        i_b = -1
+        if B > 1 and B % notes["batch_devices"] == 0:
+            for i, d in enumerate(dims):
+                if d == B:
+                    spec[i] = rules.batch
+                    i_b = i
+                    break
+        if cache_shard == "headdim" and len(dims) >= 4 \
+                and dims[-1] % tp == 0:
+            # shard D: token writes touch one slot (no select over the
+            # seq shard); scores psum over D instead (§Perf variant)
+            spec[-1] = rules.tp
+            return P(*spec)
+        for i in range(i_b + 1, len(dims)):
+            if dims[i] >= 1024 and dims[i] % tp == 0:
+                spec[i] = rules.tp
+                break
+        return P(*spec)
+
+    cspecs = jax.tree.map(_cache_spec, c_shapes,
+                          is_leaf=lambda x: isinstance(
+                              x, jax.ShapeDtypeStruct))
+    cache_in = _sds(c_shapes, cspecs, mesh)
+    tok = jax.ShapeDtypeStruct(
+        (B,), jnp.int32,
+        sharding=NamedSharding(mesh, _batch_spec(B, mesh, rules, 0)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    fn = make_serve_step(cfg, rules)
+    return CellSpec(arch, shape, cfg, fn, (params_in, tok, pos, cache_in),
+                    (3,), "decode", notes)

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture × input shape) cell against the
+production meshes — 16×16 (single pod, 256 chips) and 2×16×16 (two pods,
+512 chips) — and records ``memory_analysis()`` / ``cost_analysis()`` plus
+the HLO-derived roofline terms to ``artifacts/dryrun/*.json``.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); this module is the only place the 512
+placeholder devices exist — tests and benchmarks see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES
+from .cells import SkipCell, build_cell
+from .mesh import HW, make_production_mesh
+from .roofline import analyze_hlo, model_flops, roofline_terms
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DT_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+             "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8}
+
+
+def _legalization_excess(hlo: str) -> int:
+    """Bytes of unique f32 shapes that also exist as bf16 buffers."""
+    import re
+    shapes: dict[str, set[str]] = {}
+    for m in re.finditer(r"= (f32|bf16)\[([\d,]+)\]", hlo):
+        shapes.setdefault(m.group(2), set()).add(m.group(1))
+    excess = 0
+    for dims, dts in shapes.items():
+        if dts >= {"f32", "bf16"}:
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            if n * 4 > 50e6:        # only large buffers matter
+                excess += n * 4
+    return excess
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             cfg_overrides: dict | None = None,
+             rules_overrides: dict | None = None,
+             cache_shard: str = "seq", knobs=None,
+             save: bool = True, verbose: bool = True,
+             tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, cfg_overrides=cfg_overrides,
+                      rules_overrides=rules_overrides,
+                      cache_shard=cache_shard, knobs=knobs)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    analysis = analyze_hlo(hlo, n_chips)
+    mf = model_flops(cell.cfg, cell.shape, cell.kind)
+    terms = roofline_terms(analysis, n_chips, mf)
+    # second analysis: "pallas:" regions re-costed as fused kernels
+    k_analysis = analyze_hlo(hlo, n_chips, kernel_substitute=True)
+    k_terms = roofline_terms(k_analysis, n_chips, mf)
+
+    # The CPU backend has no native bf16: XLA float-normalization clones
+    # bf16 loop buffers into f32 twins (verified in tests/test_roofline).
+    # On a bf16-native TPU those twins do not exist; subtract each unique
+    # f32 shape that also appears as a bf16 buffer (conservative: once
+    # per shape).
+    legal_excess = _legalization_excess(hlo)
+    mem_stats = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "bf16_legalization_excess_bytes": legal_excess,
+        "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes),
+    }
+    # never adjust below what args+outputs alone require
+    floor = (mem_stats["argument_bytes"] + mem_stats["output_bytes"]
+             - mem_stats["alias_bytes"])
+    mem_stats["adjusted_peak_bytes"] = max(
+        mem_stats["peak_estimate_bytes"] - legal_excess, floor)
+    fits = mem_stats["adjusted_peak_bytes"] <= HW.HBM_BYTES
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": cell.kind,
+        "notes": cell.static_notes,
+        "memory": mem_stats,
+        "fits_16GB": bool(fits),
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")
+                          if k in cost},
+        "hlo_analysis": analysis.to_json(),
+        "terms": terms.to_json(),
+        "kernel_analysis": k_analysis.to_json(),
+        "kernel_terms": k_terms.to_json(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "tag": tag,
+    }
+    if verbose:
+        print(f"[{record['mesh']}] {arch} × {shape}  "
+              f"({cell.kind}, {n_chips} chips)")
+        print(f"  memory/device: args={mem_stats['argument_bytes']/1e9:.2f}GB "
+              f"temp={mem_stats['temp_bytes']/1e9:.2f}GB "
+              f"peak≈{mem_stats['peak_estimate_bytes']/1e9:.2f}GB "
+              f"adj≈{mem_stats['adjusted_peak_bytes']/1e9:.2f}GB "
+              f"{'FITS' if fits else 'OVER'} 16GB")
+        print(f"  cost_analysis: flops/dev={cost.get('flops', 0):.3e} "
+              f"(body-once) bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  hlo (trip-scaled): flops/dev={analysis.flops:.3e} "
+              f"hbm={analysis.hbm_bytes:.3e}B "
+              f"wire={analysis.collective_bytes:.3e}B "
+              f"({analysis.collective_count} colls)")
+        print(f"  terms: compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms "
+              f"collective={terms.collective_s*1e3:.2f}ms "
+              f"-> {terms.dominant}-bound; useful={terms.useful_ratio:.2f}")
+        print(f"  w/kernels: memory={k_terms.memory_s*1e3:.2f}ms "
+              f"-> {k_terms.dominant}-bound "
+              f"(saved {k_analysis.kernel_bytes_saved/1e9:.1f}GB region "
+              f"traffic, boundary {k_analysis.kernel_boundary_bytes/1e9:.1f}GB)")
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        name = f"{arch}_{shape}_{record['mesh']}{suffix}.json".replace(
+            "/", "-")
+        (ART_DIR / name).write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="run only the 2x16x16 mesh")
+    ap.add_argument("--single-pod", action="store_true",
+                    help="run only the 16x16 mesh")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True]
+    if args.multi_pod:
+        meshes = [True]
+    elif args.single_pod:
+        meshes = [False]
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures, skips = [], []
+    for multi in meshes:
+        for arch, shape in cells:
+            try:
+                run_cell(arch, shape, multi_pod=multi,
+                         save=not args.no_save)
+            except SkipCell as e:
+                skips.append((arch, shape, str(e)))
+                print(f"[skip] {arch} × {shape}: {e}")
+            except Exception:
+                failures.append((arch, shape, multi))
+                print(f"[FAIL] {arch} × {shape} multi={multi}")
+                traceback.print_exc()
+    print(f"\n{len(cells)*len(meshes) - len(failures) - len(skips)} ok, "
+          f"{len(skips)} skipped, {len(failures)} FAILED")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state): 16×16 = 256 chips per pod (v5e), 2 pods = 512
+chips multi-pod.  The ``pod`` axis composes with ``data`` for the
+batch/FSDP dimension; ``model`` is the TP axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..models.sharding import Rules
+
+__all__ = ["make_production_mesh", "rules_for_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def rules_for_mesh(mesh: jax.sharding.Mesh,
+                   overrides: dict | None = None) -> Rules:
+    if "pod" in mesh.axis_names:
+        b = ("pod", "data")
+    else:
+        b = ("data",)
+    return Rules(batch=b, fsdp=b, tp="model", overrides=overrides or {})
+
+
+class HW:
+    """TPU v5e hardware constants (per chip) for the roofline terms."""
+
+    PEAK_FLOPS = 197e12        # bf16
+    HBM_BW = 819e9             # bytes/s
+    ICI_BW = 50e9              # bytes/s per link
+    HBM_BYTES = 16e9

@@ -1,0 +1,564 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+``jax.stages.Compiled.cost_analysis()`` on this XLA build reports
+*per-device* flops and counts a ``while`` (scan) body **once** (verified
+in ``tests/test_roofline.py`` against an unrolled toy).  This module
+therefore walks the compiled HLO text itself:
+
+* computations are parsed into op lists with a result-shape symbol table;
+* ``while`` bodies are scaled by their trip count (recovered from the
+  loop-condition comparison constant — scans lower to counted loops);
+* FLOPs come from ``dot`` ops (2 · |result| · |contraction|), recursing
+  into output fusions;
+* HBM bytes are modeled per top-level op as operands + result (fusions
+  internalize their interior; slice/gather/update ops count only the
+  moved slice, not the full buffer);
+* collective bytes-on-wire per device use ring formulas over the
+  replica-group size g: all-gather / all-to-all / reduce-scatter move
+  size·(g−1)/g, all-reduce 2·size·(g−1)/g, collective-permute size.
+
+Terms (per device, seconds):
+    compute    = flops / PEAK_FLOPS
+    memory     = hbm_bytes / HBM_BW
+    collective = wire_bytes / (n_links · ICI_BW)
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+
+from .mesh import HW
+
+__all__ = ["HloAnalysis", "analyze_hlo", "roofline_terms", "Terms"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_REGION_RE = re.compile(r'op_name="[^"]*pallas:([\w\-]+)')
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[\d, ]+\}(?:,\{[\d, ]+\})*)\}")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(type_sig: str) -> int:
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_sig))
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    type_sig: str
+    rest: str           # everything after the opening paren
+    result_bytes: int
+    region: str | None = None   # "pallas:<name>" kernel region tag
+    is_root: bool = False
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+
+
+@dataclass
+class HloAnalysis:
+    """Per-device totals (trip-count scaled)."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0       # bytes on wire per device
+    collective_by_kind: dict = field(default_factory=dict)
+    collective_count: int = 0
+    while_trips: dict = field(default_factory=dict)
+    #: bytes removed by fusing "pallas:" regions (interior stays VMEM)
+    kernel_bytes_saved: float = 0.0
+    kernel_boundary_bytes: float = 0.0
+    notes: list = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": self.collective_by_kind,
+            "collective_count": self.collective_count,
+            "while_trips": self.while_trips,
+            "kernel_bytes_saved": self.kernel_bytes_saved,
+            "kernel_boundary_bytes": self.kernel_boundary_bytes,
+            "notes": self.notes,
+        }
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = _Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, type_sig, opcode, rest = om.groups()
+            rm = _REGION_RE.search(line)
+            cur.ops.append(_Op(name, opcode, type_sig, rest,
+                               _result_bytes(type_sig),
+                               region=rm.group(1) if rm else None,
+                               is_root=line.lstrip().startswith("ROOT")))
+    return comps
+
+
+def _group_size(rest: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return n_devices
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are inside the first balanced paren group of `rest`
+    depth = 1
+    out = []
+    buf = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return re.findall(r"%([\w.\-]+)", "".join(buf))
+
+
+def _trip_count(cond: _Computation) -> int:
+    consts = []
+    for op in cond.ops:
+        consts += [int(c) for c in _CONST_RE.findall(
+            op.opcode + "(" + op.rest)]
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+class _Walker:
+    def _symbols(self, comp: _Computation) -> dict[str, int]:
+        """name → bytes, with width-change converts aliased to their
+        source: the CPU backend legalizes bf16 compute through f32
+        converts that a bf16-native TPU never materializes, so a
+        convert's consumers are charged the source width and the convert
+        itself carries no traffic.  All-gathers of converted values are
+        likewise charged at the source width × gather factor."""
+        syms: dict[str, int] = {}
+        raw: dict[str, int] = {}
+        for op in comp.ops:
+            syms[op.name] = op.result_bytes
+            raw[op.name] = op.result_bytes
+            srcs = _operand_names(op.rest)
+            if op.opcode == "convert" and len(srcs) == 1 \
+                    and srcs[0] in syms:
+                syms[op.name] = min(op.result_bytes, syms[srcs[0]])
+            elif op.opcode.startswith("all-gather") and srcs \
+                    and srcs[0] in syms and raw.get(srcs[0]):
+                ratio = op.result_bytes / raw[srcs[0]]
+                syms[op.name] = min(op.result_bytes,
+                                    int(syms[srcs[0]] * ratio))
+        return syms
+
+    def __init__(self, comps: dict[str, _Computation], n_devices: int,
+                 kernel_substitute: bool = False):
+        self.comps = comps
+        self.n_devices = n_devices
+        self.kernel_substitute = kernel_substitute
+        self.analysis = HloAnalysis()
+        self._memo_flops: dict[str, float] = {}
+
+    # -- dot flops (recursing into fusions) ------------------------------
+
+    def _dot_flops(self, comp: _Computation, syms: dict) -> float:
+        if comp.name in self._memo_flops:
+            return self._memo_flops[comp.name]
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                res_elems = 1
+                for dt, dims in _SHAPE_RE.findall(op.type_sig):
+                    if dims:
+                        for d in dims.split(","):
+                            res_elems *= int(d)
+                    break
+                contract = 1
+                cm = _CONTRACT_RE.search(op.rest)
+                operands = _operand_names(op.rest)
+                if cm and operands:
+                    lhs_shape = self._op_shape(comp, operands[0])
+                    if lhs_shape is not None and cm.group(1):
+                        for idx in cm.group(1).split(","):
+                            i = int(idx)
+                            if i < len(lhs_shape):
+                                contract *= lhs_shape[i]
+                total += 2.0 * res_elems * contract
+            elif op.opcode == "fusion":
+                cm = _CALL_RE.search(op.rest)
+                if cm and cm.group(1) in self.comps:
+                    sub = self.comps[cm.group(1)]
+                    total += self._dot_flops(sub, self._symbols(sub))
+        self._memo_flops[comp.name] = total
+        return total
+
+    def _fusion_bytes(self, op: _Op, syms: dict[str, int]) -> float:
+        ins, out = self._fusion_io(op, syms)
+        return sum(ins.values()) + out
+
+    def _fusion_io(self, op: _Op, syms: dict[str, int]
+                   ) -> tuple[dict[str, float], float]:
+        """Per-operand HBM reads + output write of a fusion, modeled
+        from its interior:
+
+        * a parameter consumed ONLY by dynamic-slice ops → the slices'
+          bytes (loop-buffer reads are slice-sized, not buffer-sized);
+        * a parameter that is the in-place destination (operand 0) of a
+          dynamic-update-slice → 0 read (aliased in place);
+        * any other parameter → read once, full size;
+        * output: if the fused root is a dynamic-update-slice, only the
+          update is written; else the full result.
+        """
+        m = _CALL_RE.search(op.rest)
+        sub = self.comps.get(m.group(1)) if m else None
+        operands = _operand_names(op.rest)
+        if sub is None:
+            return ({n: syms.get(n, 0) for n in operands},
+                    op.result_bytes)
+        sub_syms = self._symbols(sub)
+        # alias map: convert/bitcast/copy/reshape are transparent — the
+        # classification below must see *through* legalization converts
+        alias: dict[str, str] = {}
+
+        def resolve(n: str) -> str:
+            seen = set()
+            while n in alias and n not in seen:
+                seen.add(n)
+                n = alias[n]
+            return n
+
+        for sop in sub.ops:
+            if sop.opcode in ("convert", "bitcast", "copy", "reshape"):
+                srcs = _operand_names(sop.rest)
+                if len(srcs) == 1:
+                    alias[sop.name] = srcs[0]
+        # parameter name -> argument index
+        param_idx: dict[str, int] = {}
+        for sop in sub.ops:
+            if sop.opcode == "parameter":
+                pm = re.match(r"\s*(\d+)", sop.rest)
+                if pm:
+                    param_idx[sop.name] = int(pm.group(1))
+        # effective consumers of each root value
+        consumers: dict[str, list[_Op]] = {}
+        for sop in sub.ops:
+            if sop.opcode in ("convert", "bitcast", "copy", "reshape"):
+                continue                     # transparent
+            for n in _operand_names(sop.rest):
+                consumers.setdefault(resolve(n), []).append(sop)
+        ins: dict[str, float] = {}
+        for pname, idx in param_idx.items():
+            oname = operands[idx] if idx < len(operands) else None
+            ext = syms.get(oname, 0) if oname else 0
+            cons = consumers.get(pname, [])
+            if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                val = sum(c.result_bytes for c in cons)
+            elif cons and any(
+                    c.opcode == "dynamic-update-slice"
+                    and resolve(_operand_names(c.rest)[0]) == pname
+                    for c in cons if _operand_names(c.rest)):
+                val = 0.0                   # in-place destination
+            else:
+                val = float(ext)
+            if oname:
+                ins[oname] = ins.get(oname, 0.0) + val
+        root = next((sop for sop in sub.ops if sop.is_root),
+                    sub.ops[-1] if sub.ops else None)
+        root_name = resolve(root.name) if root is not None else None
+        root_op = next((sop for sop in sub.ops if sop.name == root_name),
+                       root)
+        if root_op is not None and root_op.opcode == "dynamic-update-slice":
+            upd = _operand_names(root_op.rest)
+            out = float(sub_syms.get(resolve(upd[1]), 0)) if len(upd) > 1 \
+                else float(op.result_bytes)
+        else:
+            out = float(op.result_bytes)
+        return ins, out
+
+    def _op_shape(self, comp: _Computation, name: str) -> list[int] | None:
+        for op in comp.ops:
+            if op.name == name:
+                m = _SHAPE_RE.search(op.type_sig)
+                if m:
+                    return [int(d) for d in m.group(2).split(",")] \
+                        if m.group(2) else []
+        return None
+
+    # -- full walk ----------------------------------------------------------
+
+    def walk(self, comp_name: str, scale: float = 1.0) -> None:
+        comp = self.comps[comp_name]
+        syms = self._symbols(comp)
+        a = self.analysis
+
+        # "pallas:" kernel regions: the interior is VMEM-resident in the
+        # fused kernel — HBM traffic is only what crosses the boundary.
+        # Region membership resolves through transparent ops (converts,
+        # bitcasts) so legalization wrappers don't leak values out.
+        region_of: dict[str, str | None] = {}
+        consumed_outside: set[str] = set()
+        if self.kernel_substitute:
+            alias: dict[str, str] = {}
+            for op in comp.ops:
+                if op.opcode in ("convert", "bitcast", "copy", "reshape",
+                                 "transpose"):
+                    srcs = _operand_names(op.rest)
+                    if len(srcs) == 1:
+                        alias[op.name] = srcs[0]
+
+            def rroot(n: str) -> str:
+                seen = set()
+                while n in alias and n not in seen:
+                    seen.add(n)
+                    n = alias[n]
+                return n
+
+            direct = {op.name: op.region for op in comp.ops}
+            for op in comp.ops:
+                region_of[op.name] = direct.get(op.name) \
+                    or direct.get(rroot(op.name))
+            for op in comp.ops:
+                my_region = region_of.get(op.name)
+                for n in _operand_names(op.rest):
+                    src_region = region_of.get(n)
+                    if src_region and my_region != src_region:
+                        consumed_outside.add(n)
+                        consumed_outside.add(rroot(n))
+                if op.is_root:
+                    consumed_outside.add(op.name)
+
+        def _in_region(op: _Op) -> str | None:
+            if not self.kernel_substitute:
+                return None
+            return op.region
+
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ("parameter", "constant", "get-tuple-element",
+                      "tuple", "bitcast", "iota", "after-all",
+                      "partition-id", "replica-id", "convert"):
+                # converts: width-change legalization artifacts on this
+                # backend; aliased in the symbol table instead
+                continue
+            if oc == "while":
+                refs = dict(re.findall(r"(body|condition)=%([\w.\-]+)",
+                                       op.rest))
+                body, cond = refs.get("body"), refs.get("condition")
+                trips = _trip_count(self.comps[cond]) if cond else 1
+                a.while_trips[body or "?"] = trips
+                if body in self.comps:
+                    self.walk(body, scale * trips)
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.rest)
+                subs = [b for b in branches if b in self.comps]
+                for b in subs[:1]:      # take first branch (true-branch)
+                    self.walk(b, scale)
+                continue
+            if oc in ("call", "async-start"):
+                cm = _CALL_RE.search(op.rest)
+                if cm and cm.group(1) in self.comps:
+                    self.walk(cm.group(1), scale)
+                continue
+            # ---- collectives -------------------------------------------
+            if any(oc.startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if oc.startswith(c))
+                g = _group_size(op.rest, self.n_devices)
+                # size at the *aliased* width (a TPU would move bf16
+                # where this backend legalized to f32)
+                size = op.result_bytes
+                srcs = _operand_names(op.rest)
+                if kind == "all-gather" and op.name in syms:
+                    size = syms[op.name]
+                elif srcs:
+                    al = sum(syms.get(n, 0) for n in srcs if n in syms)
+                    if al:
+                        size = min(size, al)
+                if kind == "all-gather":
+                    wire = size * (g - 1) / max(g, 1)
+                elif kind == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif kind == "reduce-scatter":
+                    wire = size * (g - 1)   # result is the scattered shard
+                elif kind == "all-to-all":
+                    wire = size * (g - 1) / max(g, 1)
+                else:                       # collective-permute
+                    wire = size
+                a.collective_bytes += wire * scale
+                a.collective_by_kind[kind] = \
+                    a.collective_by_kind.get(kind, 0.0) + wire * scale
+                a.collective_count += int(scale) if scale >= 1 else 1
+                a.hbm_bytes += 2.0 * size * scale
+                continue
+            # ---- flops ---------------------------------------------------
+            if oc == "dot":
+                res_elems = 1
+                m = _SHAPE_RE.search(op.type_sig)
+                if m and m.group(2):
+                    for d in m.group(2).split(","):
+                        res_elems *= int(d)
+                contract = 1
+                cm = _CONTRACT_RE.search(op.rest)
+                operands = _operand_names(op.rest)
+                if cm and operands:
+                    lhs_shape = self._op_shape(comp, operands[0])
+                    if lhs_shape is not None and cm.group(1):
+                        for idx in cm.group(1).split(","):
+                            i = int(idx)
+                            if i < len(lhs_shape):
+                                contract *= lhs_shape[i]
+                a.flops += 2.0 * res_elems * contract * scale
+            elif op.opcode == "fusion":
+                cm = _CALL_RE.search(op.rest)
+                if cm and cm.group(1) in self.comps:
+                    sub = self.comps[cm.group(1)]
+                    a.flops += self._dot_flops(sub, None) * scale
+            # ---- bytes ----------------------------------------------------
+            if self.kernel_substitute and op.region is not None:
+                # A fused kernel-region op: charge only the traffic that
+                # crosses the region boundary (slice-aware for fusions);
+                # interior values stay in VMEM.
+                if op.opcode == "fusion":
+                    in_map, out_b = self._fusion_io(op, syms)
+                else:
+                    in_map = {n: syms.get(n, 0)
+                              for n in _operand_names(op.rest)}
+                    out_b = float(op.result_bytes)
+                full = sum(in_map.values()) + out_b
+                io = 0.0
+                for n, b in in_map.items():
+                    if region_of.get(n) != op.region:
+                        io += b             # value entering the kernel
+                if op.name in consumed_outside:
+                    io += out_b             # value leaving the kernel
+                a.hbm_bytes += io * scale
+                a.kernel_boundary_bytes += io * scale
+                a.kernel_bytes_saved += max(0.0, full - io) * scale
+                continue
+            if oc in ("dynamic-slice", "gather"):
+                a.hbm_bytes += 2.0 * op.result_bytes * scale
+            elif oc == "dynamic-update-slice":
+                operands = _operand_names(op.rest)
+                upd = syms.get(operands[1], 0) if len(operands) > 1 else 0
+                a.hbm_bytes += 2.0 * upd * scale
+            elif oc == "scatter":
+                operands = _operand_names(op.rest)
+                upd = syms.get(operands[-1], 0) if operands else 0
+                a.hbm_bytes += 2.0 * upd * scale
+            elif oc == "fusion":
+                a.hbm_bytes += self._fusion_bytes(op, syms) * scale
+            else:
+                opb = sum(syms.get(n, 0) for n in _operand_names(op.rest))
+                a.hbm_bytes += (opb + op.result_bytes) * scale
+
+
+def analyze_hlo(text: str, n_devices: int,
+                entry: str | None = None,
+                kernel_substitute: bool = False) -> HloAnalysis:
+    """``kernel_substitute=True`` re-costs ops inside ``pallas:`` named
+    scopes as a fused kernel: interior traffic → VMEM (dropped), only
+    boundary values count.  This models the measured Pallas kernels
+    replacing the XLA-fallback attention/WKV/RG-LRU paths on real TPUs
+    (EXPERIMENTS.md §Perf)."""
+    comps = _parse_computations(text)
+    if not comps:
+        raise ValueError("no computations parsed from HLO text")
+    if entry is None:
+        # ENTRY computation: the one whose name starts with 'main'
+        entry = next((n for n in comps if n.startswith("main")),
+                     next(iter(comps)))
+    w = _Walker(comps, n_devices, kernel_substitute=kernel_substitute)
+    w.walk(entry)
+    return w.analysis
+
+
+@dataclass
+class Terms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    dominant: str
+
+    def to_json(self) -> dict:
+        return self.__dict__.copy()
+
+
+def roofline_terms(analysis: HloAnalysis, n_chips: int,
+                   model_flops_total: float,
+                   n_links: int = 4) -> Terms:
+    compute = analysis.flops / HW.PEAK_FLOPS
+    memory = analysis.hbm_bytes / HW.HBM_BW
+    coll = analysis.collective_bytes / (n_links * HW.ICI_BW)
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_total / max(analysis.flops * n_chips, 1.0)
+    return Terms(compute, memory, coll, model_flops_total,
+                 analysis.flops, useful, dominant)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), N = active."""
+    _, active = cfg.param_count()
+    if kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch

@@ -1,0 +1,63 @@
+"""Serving launcher — continuous batching + prediction autoscaling demo.
+
+    python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        --requests 16 --policy prediction
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..models import init_params
+from ..serving import AutoScaler, Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--policy", default="prediction",
+                    choices=["busy", "idle", "prediction"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(cfg, params, max_batch=args.max_batch,
+                           max_len=128)
+    scaler = AutoScaler(engine.monitor, max_replicas=args.max_batch,
+                        policy=args.policy)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 24)) \
+            .tolist()
+        reqs.append(engine.submit(Request(prompt=prompt,
+                                          max_new_tokens=args.max_new)))
+    targets = []
+    while engine.load:
+        targets.append(scaler.target(len(engine.queue),
+                                     sum(r is not None
+                                         for r in engine.active)))
+        engine.tick()
+    wall = time.perf_counter() - t0
+    lat = [r.done_at - r.submitted_at for r in reqs]
+    print(f"{args.requests} requests, {engine.tokens_out} tokens in "
+          f"{wall:.2f}s ({engine.tokens_out / wall:.1f} tok/s)")
+    print(f"latency p50={np.percentile(lat, 50)*1e3:.0f}ms "
+          f"p95={np.percentile(lat, 95)*1e3:.0f}ms")
+    print(f"autoscaler Δ trace (first 20): {targets[:20]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""LM substrate: one pattern-based decoder covering dense GQA, MoE,
+RG-LRU hybrid and RWKV-6 architectures, with KV-cache serving paths."""
+
+from .config import LayerKind, ModelConfig
+from .sharding import Rules
+from .transformer import (cache_specs, decode_step, forward, init_cache,
+                          init_params, lm_loss, param_specs, prefill)
+
+__all__ = [
+    "LayerKind", "ModelConfig", "Rules",
+    "cache_specs", "decode_step", "forward", "init_cache", "init_params",
+    "lm_loss", "param_specs", "prefill",
+]

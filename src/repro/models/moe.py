@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN — GShard-style capacity-bounded one-hot dispatch.
+
+Design notes (TPU adaptation):
+
+* Dispatch/combine are einsums against a one-hot ``(B, c, E, C)`` tensor —
+  all-to-alls emerge from GSPMD when the expert dim is sharded.
+* The sequence is processed in chunks of ``cfg.moe_seq_chunk`` (scan), so
+  the dispatch temporary is bounded at ``B·c·E·C_chunk`` regardless of
+  sequence length — this is what lets mixtral (E=8, big capacity) lower
+  for 32k prefill without an O(S²/E)-sized temp.
+* Experts are sharded over the ``model`` axis when ``E % tp == 0``
+  (llama4: 128/16 = 8 experts per device); otherwise the expert weights
+  are TP-sharded over ``d_ff`` (mixtral: 8 < 16) and every device holds a
+  slice of all experts.
+* Router math in fp32; top-k renormalized (mixtral convention).
+
+Returns the layer output and the load-balancing auxiliary loss
+(Switch-style: ``E · Σ_e f_e · P_e``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import mlp_apply
+
+__all__ = ["moe_apply", "init_moe"]
+
+
+def _dispatch_chunk(xc: jax.Array, p: dict, cfg, constrain) -> tuple:
+    """One sequence chunk through the routed experts.
+
+    xc: (B, c, d) -> (out (B, c, d), aux scalar)
+    """
+    B, c, d = xc.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(k, int(math.ceil(c * k / E * cfg.capacity_factor)))
+
+    logits = (xc.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))            # (B,c,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, k)                # (B,c,k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss: fraction of tokens per expert × mean prob.
+    top1_hot = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    f_e = top1_hot.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * probs.mean(axis=(0, 1)))
+
+    # Position of each (token, slot) within its expert's capacity buffer.
+    dispatch = jnp.zeros((B, c, E, C), dtype=xc.dtype)
+    combine = jnp.zeros((B, c, E, C), dtype=jnp.float32)
+    fill = jnp.zeros((B, E), dtype=jnp.int32)
+    for slot in range(k):
+        e_hot = jax.nn.one_hot(gate_idx[..., slot], E,
+                               dtype=jnp.int32)              # (B,c,E)
+        pos = fill[:, None, :] + jnp.cumsum(e_hot, axis=1) - e_hot
+        keep = (e_hot > 0) & (pos < C)
+        pos_hot = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                                 dtype=xc.dtype)[..., :C]    # (B,c,E,C)
+        sel = pos_hot * e_hot[..., None].astype(xc.dtype)
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) \
+            * gate_vals[..., slot][..., None, None]
+        fill = fill + e_hot.sum(axis=1)
+
+    xd = jnp.einsum("bcek,bcd->ebkd", dispatch, xc)          # (E,B,C,d)
+    xd = constrain(xd, "expert_tokens")
+    h = jax.nn.silu(jnp.einsum("ebkd,edf->ebkf", xd, p["w1"]))
+    if "w3" in p:
+        h = h * jnp.einsum("ebkd,edf->ebkf", xd, p["w3"])
+    ye = jnp.einsum("ebkf,efd->ebkd", h, p["w2"])            # (E,B,C,d)
+    ye = constrain(ye, "expert_tokens")
+    out = jnp.einsum("bcek,ebkd->bcd", combine.astype(ye.dtype), ye)
+    return out, aux
+
+
+def moe_apply(x: jax.Array, p: dict, cfg,
+              constrain=lambda t, _n: t) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (out (B, S, d), aux loss scalar)."""
+    B, S, d = x.shape
+    chunk = cfg.moe_seq_chunk
+    if chunk <= 0 or S <= chunk:
+        out, aux = _dispatch_chunk(x, p, cfg, constrain)
+    else:
+        assert S % chunk == 0, (S, chunk)
+        n = S // chunk
+        xs = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+
+        # checkpointed: otherwise the backward stacks every chunk's
+        # (B,c,E,C) dispatch tensor + expert activations as residuals
+        @jax.checkpoint
+        def body(_, xc):
+            o, a = _dispatch_chunk(xc, p, cfg, constrain)
+            return None, (o, a)
+
+        _, (outs, auxs) = lax.scan(body, None, xs)
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, d)
+        aux = auxs.mean()
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(x, p["shared"], cfg.mlp)
+    return out, aux
+
+
+def init_moe(key: jax.Array, cfg, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(ff)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * std_in,
+        "w1": jax.random.normal(ks[1], (E, d, ff), dtype) * std_in,
+        "w2": jax.random.normal(ks[2], (E, ff, d), dtype) * std_out,
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(ks[3], (E, d, ff), dtype) * std_in
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, ff * cfg.n_shared_experts,
+                               cfg.mlp, dtype)
+    return p

@@ -1,0 +1,142 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin, arXiv:2402.19427):
+
+    x ─ RMSNorm ─┬─ linear gate ── GeLU ──────────────┐
+                 └─ linear y ── causal conv1d ── RG-LRU ⊙ ── linear out ─ +residual
+
+RG-LRU recurrence (all elementwise over the recurrent width):
+
+    r_t = σ(W_a x_t + b_a)          (recurrence gate, block-diagonal W_a)
+    i_t = σ(W_x x_t + b_x)          (input gate,      block-diagonal W_x)
+    a_t = exp(-c · softplus(Λ) · r_t)            c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over (a, b) pairs —
+O(log S) depth, fp32 carries.  Decode keeps an O(1) state: the hidden
+``h`` plus the last ``conv_width−1`` conv inputs.  The Pallas kernel in
+:mod:`repro.kernels.rglru` implements the same scan with chunked VMEM
+tiles.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rmsnorm
+
+__all__ = ["rglru_scan", "rglru_block", "init_rglru", "conv1d_causal",
+           "RGLRU_C"]
+
+RGLRU_C = 8.0
+
+
+def _gates(x: jax.Array, p: dict) -> tuple[jax.Array, jax.Array]:
+    """Block-diagonal gate projections.  x: (B, S, R) → (a_t, gated input)."""
+    B, S, R = x.shape
+    H = p["wa"].shape[0]                       # gate heads
+    xh = x.reshape(B, S, H, R // H)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bshr,hrk->bshk", xh, p["wa"]) + p["ba"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("bshr,hrk->bshk", xh, p["wx"]) + p["bx"])
+    r = r.reshape(B, S, R)
+    i = i.reshape(B, S, R)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = i * x
+    return a, gated
+
+
+def rglru_scan(a: jax.Array, bx: jax.Array,
+               h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over the time axis.
+
+    a, bx: (B, S, R) fp32; h0: (B, R) initial state or None.
+    Returns h: (B, S, R).
+    """
+    a = a.astype(jnp.float32)
+    bx = bx.astype(jnp.float32)
+    if h0 is not None:
+        # Fold the initial state into the first step: b_1 += a_1 h_0.
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    with jax.named_scope("pallas:rglru"):
+        _, h = lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None) -> jax.Array:
+    """Per-channel causal conv.  x: (B,S,R); w: (W,R); state: (B,W-1,R)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def rglru_block(x: jax.Array, p: dict, cfg, state: dict | None = None,
+                ) -> tuple[jax.Array, dict | None]:
+    """The full recurrent block.  x: (B, S, d); returns (y, new_state).
+
+    ``state`` (decode): {"h": (B,R) fp32, "conv": (B,W-1,R)}.
+    """
+    B, S, _ = x.shape
+    h_in = rmsnorm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(h_in @ p["w_gate"], approximate=True)
+    y = h_in @ p["w_y"]
+    new_state: dict | None = None
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"].astype(y.dtype), y],
+                                  axis=1)
+        y = conv1d_causal(y, p["conv_w"], p["conv_b"], state["conv"])
+        a, bx = _gates(y, p)
+        h_prev = state["h"]
+        h = a[:, 0] * h_prev + jnp.sqrt(
+            jnp.clip(1.0 - a[:, 0] ** 2, 0.0)) * bx[:, 0].astype(jnp.float32)
+        hs = h[:, None, :]
+        new_state = {"h": h, "conv": conv_in[:, 1:].astype(jnp.bfloat16)}
+    else:
+        y = conv1d_causal(y, p["conv_w"], p["conv_b"])
+        a, bx = _gates(y, p)
+        bx = jnp.sqrt(jnp.clip(1.0 - a ** 2, 0.0)) * bx.astype(jnp.float32)
+        hs = rglru_scan(a, bx)
+    out = (gate * hs.astype(gate.dtype)) @ p["w_out"]
+    return out, new_state
+
+
+def init_rglru(key: jax.Array, cfg, dtype) -> dict:
+    d = cfg.d_model
+    R = cfg.rnn_width or d
+    H = max(1, cfg.n_heads)
+    k = R // H
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_gate": jax.random.normal(ks[0], (d, R), dtype) * std,
+        "w_y": jax.random.normal(ks[1], (d, R), dtype) * std,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, R),
+                                    dtype) / math.sqrt(cfg.conv_width),
+        "conv_b": jnp.zeros((R,), dtype),
+        "wa": jax.random.normal(ks[3], (H, k, k), jnp.float32) / math.sqrt(k),
+        "ba": jnp.zeros((H, k), jnp.float32),
+        "wx": jax.random.normal(ks[4], (H, k, k), jnp.float32) / math.sqrt(k),
+        "bx": jnp.zeros((H, k), jnp.float32),
+        # Λ init so a^c·softplus ∈ (0.9, 0.999)-ish at σ(r)≈0.5
+        "lam": jnp.linspace(-2.0, 1.0, R).astype(jnp.float32),
+        "w_out": jax.random.normal(ks[5], (R, d), dtype) / math.sqrt(R),
+    }

@@ -1,0 +1,224 @@
+"""RWKV-6 ("Finch") — attention-free time-mix with data-dependent decay.
+
+Per head (head dim N = 64), the WKV state is an N×N matrix:
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+
+with w_t = exp(-exp(w0 + LoRA_w(x̄_t))) — the data-dependent decay that
+distinguishes RWKV-6 from RWKV-5.  Token-shift mixing (ddlerp) computes
+per-channel interpolations between x_t and x_{t-1} with LoRA-modulated
+coefficients for each of r/k/v/w/g.
+
+Training/prefill uses a *chunked* formulation (chunk L): within a chunk
+the decays are factored into cumulative products so the intra-chunk part
+is two masked matmuls, and the state is carried across chunks by a scan —
+O(S·N²/L) state math + O(S·L·N) matmuls, numerically guarded by clamping
+log-decay spans (contributions below e^-40 are flushed).  Decode carries
+the state matrix: O(1) per token.  The Pallas kernel in
+:mod:`repro.kernels.rwkv6` implements the same chunked algorithm.
+
+Channel-mix is the RWKV squared-ReLU MLP.  Head-wise GroupNorm follows
+the WKV output (per the reference implementation).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rmsnorm
+
+__all__ = ["wkv6_chunked", "wkv6_scan_ref", "rwkv_block", "init_rwkv"]
+
+_CLAMP = 40.0
+
+
+def wkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Step-by-step reference.  r,k,v,w: (B,H,S,N); u: (H,N).
+
+    Returns (y (B,H,S,N), s_final (B,H,N,N)).  fp32 math.
+    """
+    B, H, S, N = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                     # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, w))
+    s_fin, ys = lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin
+
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 16):
+    """Chunked parallel WKV-6.  Same signature/results as the scan ref.
+
+    Intra-chunk decays use the exact pairwise log-difference
+    ``lc_{t-1} − lc_s`` (≤ 0 for s < t, so a single one-sided clip is
+    lossless down to e^-40); the (L, L, N) pairwise tensor is why the
+    chunk is kept small — the Pallas kernel holds it in VMEM.
+    """
+    B, H, S, N = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        zeros = jnp.zeros((B, H, pad, N), jnp.float32)
+        r = jnp.concatenate([r, zeros], axis=2)
+        k = jnp.concatenate([k, zeros], axis=2)
+        v = jnp.concatenate([v, zeros], axis=2)
+        w = jnp.concatenate([w, jnp.ones((B, H, pad, N), jnp.float32)],
+                            axis=2)
+    L = chunk
+    n = r.shape[2] // L
+
+    def reshape(t):
+        return t.reshape(B, H, n, L, N).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, wc = (reshape(t) for t in (r, k, v, w))   # (n,B,H,L,N)
+
+    def body(s, inp):
+      with jax.named_scope("pallas:wkv6"):
+        rt, kt, vt, wt = inp                      # (B,H,L,N)
+        lw = jnp.log(jnp.clip(wt, 1e-38))         # ≤ 0
+        cum = jnp.cumsum(lw, axis=2)              # inclusive  lc_t
+        cum_ex = cum - lw                         # exclusive  lc_{t-1}
+        # Intra-chunk: exact pairwise decay D[t,s] = exp(lc_{t-1} − lc_s)
+        # for s < t (exponent ≤ 0 ⇒ one-sided clip is lossless).
+        diff = cum_ex[:, :, :, None, :] - cum[:, :, None, :, :]
+        decay = jnp.exp(jnp.clip(diff, -_CLAMP, 0.0))     # (B,H,L,L,N)
+        scores = jnp.einsum("bhln,bhmn,bhlmn->bhlm", rt, kt, decay)
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        bonus = jnp.einsum("bhln,bhln->bhl", rt, u[None, :, None, :] * kt)
+        y = jnp.einsum("bhlm,bhmn->bhln", scores, vt) \
+            + bonus[..., None] * vt
+        # Inter-chunk: initial-state contribution (exponent ≤ 0).
+        r_dec = rt * jnp.exp(jnp.clip(cum_ex, -_CLAMP, 0.0))
+        y = y + jnp.einsum("bhln,bhnm->bhlm", r_dec, s)
+        # State update: S' = diag(exp(lc_L))·S + Σ_s k_s·exp(lc_L−lc_s)·v_sᵀ
+        tail = cum[:, :, -1:, :]                  # lc_L  (B,H,1,N)
+        k_tail = kt * jnp.exp(jnp.clip(tail - cum, -_CLAMP, 0.0))
+        s_new = jnp.exp(jnp.clip(tail[:, :, 0, :, None], -_CLAMP, 0.0)) * s \
+            + jnp.einsum("bhln,bhlm->bhnm", k_tail, vt)
+        return s_new, y
+
+    s_fin, ys = lax.scan(body, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, -1, N)[:, :, :S]
+    return y, s_fin
+
+
+def _ddlerp(x, xx, mu, lora_a, lora_b):
+    """Data-dependent lerp: x + (x_prev − x) · (μ + tanh((x+Δ·μx)A)B)."""
+    m = mu + jnp.tanh((x + xx * mu) @ lora_a) @ lora_b
+    return x + xx * m
+
+
+def rwkv_block(x: jax.Array, p: dict, cfg,
+               state: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """Full RWKV-6 block (time-mix + channel-mix).  x: (B, S, d).
+
+    ``state`` (decode): {"shift_t", "shift_c": (B,d), "wkv": (B,H,N,N)}.
+    """
+    B, S, d = x.shape
+    N = 64
+    H = d // N
+    new_state: dict | None = None
+
+    # ---- time mix -----------------------------------------------------
+    xt = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if state is not None:
+        prev = jnp.concatenate(
+            [state["shift_t"].astype(xt.dtype)[:, None, :], xt[:, :-1]],
+            axis=1)
+    else:
+        prev = jnp.pad(xt, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xx = prev - xt
+    tm = p["tm"]
+    xr = _ddlerp(xt, xx, tm["mu_r"], tm["a_r"], tm["b_r"])
+    xk = _ddlerp(xt, xx, tm["mu_k"], tm["a_k"], tm["b_k"])
+    xv = _ddlerp(xt, xx, tm["mu_v"], tm["a_v"], tm["b_v"])
+    xw = _ddlerp(xt, xx, tm["mu_w"], tm["a_w"], tm["b_w"])
+    xg = _ddlerp(xt, xx, tm["mu_g"], tm["a_g"], tm["b_g"])
+
+    r = (xr @ tm["wr"]).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    kk = (xk @ tm["wk"]).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    vv = (xv @ tm["wv"]).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ tm["wg"])
+    logw = tm["w0"] + jnp.tanh(xw @ tm["a_w2"]) @ tm["b_w2"]
+    wdec = jnp.exp(-jnp.exp(logw.astype(jnp.float32)))
+    wdec = wdec.reshape(B, S, H, N).transpose(0, 2, 1, 3)
+
+    s0 = state["wkv"] if state is not None else None
+    if S == 1 and state is not None:
+        y, s_fin = wkv6_scan_ref(r, kk, vv, wdec, tm["u"], s0)
+    else:
+        y, s_fin = wkv6_chunked(r, kk, vv, wdec, tm["u"], s0,
+                                chunk=getattr(cfg, "rwkv_chunk", 16))
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d)
+    # Head-wise group norm.
+    yh = y.reshape(B, S, H, N).astype(jnp.float32)
+    yh = (yh - yh.mean(-1, keepdims=True)) \
+        * lax.rsqrt(yh.var(-1, keepdims=True) + 64e-5)
+    y = (yh.reshape(B, S, d) * tm["gn_w"] + tm["gn_b"]).astype(x.dtype)
+    out = x + (y * g) @ tm["wo"]
+
+    # ---- channel mix ----------------------------------------------------
+    xc = rmsnorm(out, p["ln2"], cfg.norm_eps)
+    if state is not None:
+        prevc = jnp.concatenate(
+            [state["shift_c"].astype(xc.dtype)[:, None, :], xc[:, :-1]],
+            axis=1)
+    else:
+        prevc = jnp.pad(xc, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xxc = prevc - xc
+    cm = p["cm"]
+    xk2 = xc + xxc * cm["mu_k"]
+    xr2 = xc + xxc * cm["mu_r"]
+    kk2 = jnp.square(jax.nn.relu(xk2 @ cm["wk"]))
+    out = out + jax.nn.sigmoid(xr2 @ cm["wr"]) * (kk2 @ cm["wv"])
+
+    if state is not None:
+        new_state = {"shift_t": xt[:, -1], "shift_c": xc[:, -1],
+                     "wkv": s_fin}
+    return out, new_state
+
+
+def init_rwkv(key: jax.Array, cfg, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    N = 64
+    H = d // N
+    lora, lora_w = 32, 64
+    ks = iter(jax.random.split(key, 24))
+    std = 1.0 / math.sqrt(d)
+
+    def nrm(shape, scale=std):
+        return jax.random.normal(next(ks), shape, dtype) * scale
+
+    tm = {"u": jax.random.normal(next(ks), (H, N), jnp.float32) * 0.1,
+          "w0": jnp.linspace(-6.0, -0.5, d).astype(jnp.float32),
+          "a_w2": nrm((d, lora_w)), "b_w2": nrm((lora_w, d), 0.01),
+          "gn_w": jnp.ones((d,), jnp.float32),
+          "gn_b": jnp.zeros((d,), jnp.float32)}
+    for nm in ("r", "k", "v", "w", "g"):
+        tm[f"mu_{nm}"] = jnp.full((d,), 0.5, dtype)
+        tm[f"a_{nm}"] = nrm((d, lora))
+        tm[f"b_{nm}"] = nrm((lora, d), 0.01)
+    for nm in ("wr", "wk", "wv", "wg", "wo"):
+        tm[nm] = nrm((d, d))
+    cm = {"mu_k": jnp.full((d,), 0.5, dtype),
+          "mu_r": jnp.full((d,), 0.5, dtype),
+          "wk": nrm((d, ff)), "wv": nrm((ff, d), 1.0 / math.sqrt(ff)),
+          "wr": nrm((d, d))}
+    return {"ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+            "tm": tm, "cm": cm}

@@ -1,0 +1,59 @@
+"""Sharding rules: logical tensor roles → PartitionSpec on the production
+mesh (``(data, model)`` single-pod, ``(pod, data, model)`` multi-pod).
+
+* ``batch``  — batch dims shard over (pod, data)
+* ``fsdp``   — parameter/optimizer dims shard over (pod, data) (ZeRO-3)
+* ``tp``     — head / ff / vocab / expert dims shard over model
+
+Constraints are applied through :meth:`Rules.constrain`; with
+``rules=None`` every call is a no-op so the same model code runs on a
+single CPU device in tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Rules", "P"]
+
+
+@dataclass(frozen=True)
+class Rules:
+    batch: tuple[str, ...] = ("data",)       # ("pod","data") multi-pod
+    fsdp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+    #: named activation constraint points (hillclimb levers)
+    overrides: dict = field(default_factory=dict)
+
+    # -- activation constraint points ------------------------------------
+
+    def spec(self, name: str) -> P:
+        """PartitionSpec for a named activation role."""
+        if name in self.overrides:
+            return self.overrides[name]
+        b = self.batch
+        table = {
+            "hidden": P(b, None, None),          # (B, S, d)
+            "hidden_tp": P(b, None, self.tp),    # (B, S, d) TP-sharded d
+            "heads": P(b, None, self.tp, None),  # (B, S, H, D)
+            "kv": P(b, None, None, None),        # (B, S, K, D) replicated K
+            "logits": P(b, None, self.tp),       # (B, S, V)
+            "expert_tokens": P(self.tp, b, None, None),  # (E, B, C, d)
+            "rnn": P(b, None, self.tp),          # (B, S, R)
+            "wkv_heads": P(b, self.tp, None, None),      # (B, H, S, N)
+            "wkv_state": P(b, self.tp, None, None),      # (B, H, N, N)
+            "cache": P(b, None, None, None),     # (B, Sc, K, D)
+        }
+        return table[name]
+
+    def constrain(self, x: jax.Array, name: str) -> jax.Array:
+        return jax.lax.with_sharding_constraint(x, self.spec(name))
+
+
+def constrain(rules: "Rules | None", x: jax.Array, name: str) -> jax.Array:
+    if rules is None:
+        return x
+    return rules.constrain(x, name)

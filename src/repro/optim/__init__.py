@@ -1,0 +1,8 @@
+"""Optimizers and schedules (built here, no external deps)."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .schedules import cosine_warmup
+from .clipping import global_norm, clip_by_global_norm
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+           "cosine_warmup", "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup"]
+
+
+def cosine_warmup(step, *, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1):
+    """Linear warmup → cosine decay to ``floor`` of peak.  Returns the
+    multiplicative scale in [0, 1]."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                    0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,17 @@
+"""Task-based runtime: task graph + dependences, scheduler, a real
+threaded executor and a discrete-event simulator (virtual time) that
+reproduces the paper's policy dynamics deterministically on a 1-core host.
+"""
+
+from .task import Task, TaskGraph
+from .scheduler import Scheduler
+from .thread_executor import ThreadExecutor, ExecutorReport
+from .machine import MachineModel, MN4, KNL
+from .sim import SimExecutor, SimJobSpec, SimReport, SimCluster
+
+__all__ = [
+    "Task", "TaskGraph", "Scheduler",
+    "ThreadExecutor", "ExecutorReport",
+    "MachineModel", "MN4", "KNL",
+    "SimExecutor", "SimJobSpec", "SimReport", "SimCluster",
+]

@@ -1,0 +1,42 @@
+"""Machine models for the discrete-event simulator.
+
+The paper evaluates on two systems (Table 1): MN4 (2×24-core Skylake,
+2.10 GHz) and KNL (64-core Knights Landing, 1.30 GHz).  This container has
+one physical core, so the policy dynamics are reproduced in *virtual time*
+with these models.  ``core_speed`` rescales task service times (KNL cores
+are slower per-core: lower frequency, narrower OoO core — we use the
+frequency ratio 1.30/2.10 ≈ 0.62 as the first-order factor).
+
+``resume_latency`` is the idle→running wakeup cost (futex wake + context
+switch, O(µs)) that makes *idle* policies expensive for fine-grained tasks;
+``poll_interval`` is the virtual duration of one empty scheduler poll
+(subscription-lock acquire + queue check); ``monitor_event_overhead`` is
+charged per monitoring event when the monitoring infrastructure is enabled
+(the paper measures ≤3 % total — see ``benchmarks/bench_overhead.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["MachineModel", "MN4", "KNL"]
+
+
+@dataclass(frozen=True)
+class MachineModel:
+    name: str
+    n_cores: int
+    core_speed: float = 1.0          # task speed relative to an MN4 core
+    resume_latency: float = 5e-6     # idle→running (futex + switch)
+    poll_interval: float = 5e-7      # one empty poll
+    borrow_latency: float = 2e-6     # DLB CPU hand-over
+    dlb_call_overhead: float = 1e-6  # one DLB library call (paper §3.3:
+    #                                  "such calls do not come for free")
+    monitor_event_overhead: float = 5e-8  # per monitoring event
+
+    def service_time(self, base: float) -> float:
+        return base / self.core_speed
+
+
+MN4 = MachineModel(name="MN4", n_cores=48, core_speed=1.0)
+KNL = MachineModel(name="KNL", n_cores=64, core_speed=0.62)

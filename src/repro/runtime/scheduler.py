@@ -1,0 +1,103 @@
+"""Ready-queue scheduler with dependency tracking.
+
+Emits the monitoring lifecycle events (ready / execute / completed) so the
+:class:`~repro.core.monitoring.TaskMonitor` sees exactly the transitions of
+paper Fig. 2.  FIFO within a queue; thread-safe.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Iterable
+
+from ..core.monitoring import TaskMonitor
+from .task import Task
+
+__all__ = ["Scheduler"]
+
+
+class Scheduler:
+    def __init__(self, monitor: TaskMonitor | None = None) -> None:
+        self.monitor = monitor
+        self._lock = threading.Lock()
+        self._ready: deque[Task] = deque()
+        self._pending = 0          # submitted, not yet completed
+        self._ready_count = 0
+
+    # -- submission ------------------------------------------------------
+
+    def submit(self, task: Task) -> bool:
+        """Register a task; returns True if it became ready immediately."""
+        with self._lock:
+            self._pending += 1
+            task.unmet = 0
+            for d in task.deps:
+                if not d.done:
+                    task.unmet += 1
+                    d.successors.append(task)
+            if task.unmet == 0:
+                self._push_ready_locked(task)
+                return True
+            return False
+
+    def submit_all(self, tasks: Iterable[Task]) -> int:
+        """Submit many tasks; returns how many became ready."""
+        n = 0
+        for t in tasks:
+            if self.submit(t):
+                n += 1
+        return n
+
+    def _push_ready_locked(self, task: Task) -> None:
+        self._ready.append(task)
+        self._ready_count += 1
+        if self.monitor is not None:
+            self.monitor.on_task_ready(task.task_id, task.type_name,
+                                       task.cost)
+
+    # -- polling -----------------------------------------------------------
+
+    def poll(self) -> Task | None:
+        with self._lock:
+            if not self._ready:
+                return None
+            task = self._ready.popleft()
+            self._ready_count -= 1
+        if self.monitor is not None:
+            self.monitor.on_task_execute(task.task_id, task.type_name,
+                                         task.cost)
+        return task
+
+    def complete(self, task: Task, elapsed: float) -> list[Task]:
+        """Mark done; returns tasks that *became ready* as a result."""
+        newly_ready: list[Task] = []
+        with self._lock:
+            task.done = True
+            self._pending -= 1
+            for s in task.successors:
+                s.unmet -= 1
+                if s.unmet == 0:
+                    self._push_ready_locked(s)
+                    newly_ready.append(s)
+        if self.monitor is not None:
+            self.monitor.on_task_completed(
+                task.task_id, task.type_name, task.cost, elapsed,
+                parent_id=task.parent.task_id if task.parent else None)
+        return newly_ready
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def ready_count(self) -> int:
+        with self._lock:
+            return self._ready_count
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending
+
+    def drained(self) -> bool:
+        with self._lock:
+            return self._pending == 0

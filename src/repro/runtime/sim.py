@@ -1,0 +1,465 @@
+"""Discrete-event simulator (virtual time) for policy dynamics.
+
+The container has one physical core; the paper's machines have 48/64.  The
+simulator executes task graphs against a :class:`MachineModel` in virtual
+time, driving the *real* policy / manager / monitor / predictor / broker
+code (the same objects used by the threaded executor), so policy behaviour
+— idle/resume churn, spin energy, DLB call counts, prediction dynamics —
+is reproduced deterministically.
+
+Event model (no poll storms):
+
+* Workers entering ``SPIN`` poll **once**; an empty poll either parks them
+  (busy/prediction: they are woken by work arrival or a prediction tick)
+  or schedules a single ``SPIN_EXPIRE`` event (hybrid-style budgets are
+  collapsed into one event via ``spin_count_override``).
+* Work arrival dispatches to spinning workers instantly (the "instant
+  reaction" of busy polling), then applies Alg. 2 resumes (with
+  ``resume_latency``), then DLB acquisition for sharing policies.
+* Prediction ticks fire every ``f`` virtual seconds, re-evaluating
+  spinning workers (trim) and idle workers (grow) — §3.1: "the current
+  number of CPUs can progressively be trimmed or increased to meet the
+  prediction".
+
+Spin time is integrated continuously by the :class:`EnergyMeter` (a parked
+spinning worker burns ``P_spin`` for the whole interval), so avoiding poll
+events does not distort energy.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any
+
+from ..core.energy import CoreState, EnergyMeter, PowerModel
+from ..core.manager import WorkerManager, WorkerState
+from ..core.monitoring import AccuracyReport, TaskMonitor
+from ..core.policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
+                             PollDecision, PredictionPolicy)
+from ..core.prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
+                               PredictionConfig)
+from ..core.sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
+                            ResourceBroker, SharingPolicy)
+from .machine import MachineModel
+from .scheduler import Scheduler
+from .task import Task, TaskGraph
+
+__all__ = ["SimJobSpec", "SimReport", "SimCluster", "SimExecutor"]
+
+# Event kinds (sorted lexically only via seq tiebreak; kind order irrelevant)
+_FINISH, _TICK, _RESUME, _SPIN_EXPIRE = range(4)
+
+
+@dataclass
+class SimJobSpec:
+    """Declarative description of one job in the cluster."""
+
+    name: str
+    graph: TaskGraph
+    policy: str = "busy"            # busy|idle|hybrid|prediction|
+    #                                 dlb-lewi|dlb-hybrid|dlb-prediction
+    cpus: list[int] | None = None   # global cpu ids owned by the job
+    monitoring: bool | None = None  # default: on iff policy needs it
+    prediction_rate_s: float = DEFAULT_PREDICTION_RATE_S
+    spin_budget: int = 100
+    min_samples: int = 4
+    power: PowerModel | None = None
+
+
+@dataclass(frozen=True)
+class SimReport:
+    name: str
+    policy: str
+    makespan: float
+    energy: float
+    edp: float
+    state_seconds: dict[str, float]
+    tasks_completed: int
+    resumes: int
+    idles: int
+    dlb_calls: int
+    predictions: int
+    accuracy: AccuracyReport | None
+    monitor_events: int
+
+
+class _SimJob:
+    def __init__(self, cluster: "SimCluster", spec: SimJobSpec,
+                 cpus: list[int]) -> None:
+        self.cluster = cluster
+        self.spec = spec
+        self.name = spec.name
+        self.graph = spec.graph
+        self.cpus = cpus
+        needs_monitor = spec.policy in (
+            "prediction", "dlb-prediction") or bool(spec.monitoring)
+        self.monitor = TaskMonitor(min_samples=spec.min_samples) \
+            if needs_monitor else None
+        self.scheduler = Scheduler(self.monitor)
+        self.predictor: CPUPredictor | None = None
+        sharing = spec.policy.startswith("dlb-")
+        if spec.policy in ("prediction", "dlb-prediction"):
+            assert self.monitor is not None
+            self.predictor = CPUPredictor(
+                self.monitor, n_cpus=len(cpus),
+                config=PredictionConfig(
+                    rate_s=spec.prediction_rate_s,
+                    min_samples=spec.min_samples,
+                    allow_oversubscription=sharing))
+        self.policy = self._make_policy(spec)
+        self.energy = EnergyMeter(0, spec.power, t0=cluster.now)
+        for c in cpus:
+            self.energy.add_core(c, CoreState.SPIN, cluster.now)
+        self.manager = WorkerManager(
+            len(cpus), self.policy, clock=lambda: cluster.now,
+            energy=self.energy, worker_ids=list(cpus))
+        self.sharing = sharing
+        self.epoch: dict[int, int] = {c: 0 for c in cpus}
+        self.waking: set[int] = set()
+        self.borrowed: set[int] = set()
+        self.t_done: float | None = None
+        self.monitor_events = 0
+
+    def _make_policy(self, spec: SimJobSpec) -> Policy:
+        if spec.policy == "busy":
+            return BusyPolicy()
+        if spec.policy == "idle":
+            return IdlePolicy()
+        if spec.policy == "hybrid":
+            return HybridPolicy(spin_budget=spec.spin_budget)
+        if spec.policy == "prediction":
+            assert self.predictor is not None
+            return PredictionPolicy(self.predictor)
+        if spec.policy == "dlb-lewi":
+            return LeWIPolicy()
+        if spec.policy == "dlb-hybrid":
+            return DLBHybridPolicy(spin_budget=spec.spin_budget)
+        if spec.policy == "dlb-prediction":
+            assert self.predictor is not None
+            return DLBPredictionPolicy(self.predictor)
+        raise ValueError(f"unknown policy {spec.policy!r}")
+
+    @property
+    def done(self) -> bool:
+        return self.scheduler.drained()
+
+    def spinning_workers(self) -> list[int]:
+        return [w for w, s in self.manager.states().items()
+                if s is WorkerState.SPIN and w not in self.waking]
+
+
+class SimCluster:
+    """Event loop over one machine shared by one or more jobs."""
+
+    def __init__(self, machine: MachineModel,
+                 broker: ResourceBroker | None = None) -> None:
+        self.machine = machine
+        self.broker = broker
+        self.now = 0.0
+        self._heap: list[tuple[float, int, int, Any]] = []
+        self._seq = itertools.count()
+        self.jobs: dict[str, _SimJob] = {}
+
+    # -- setup ----------------------------------------------------------------
+
+    def add_job(self, spec: SimJobSpec) -> _SimJob:
+        cpus = spec.cpus
+        if cpus is None:
+            base = sum(len(j.cpus) for j in self.jobs.values())
+            cpus = list(range(base, base + self.machine.n_cores))
+        job = _SimJob(self, spec, list(cpus))
+        self.jobs[spec.name] = job
+        if self.broker is not None:
+            self.broker.register_job(spec.name, list(cpus))
+        return job
+
+    def _push(self, t: float, kind: int, payload: Any) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    # -- main loop --------------------------------------------------------------
+
+    def run(self, max_events: int = 50_000_000) -> dict[str, SimReport]:
+        m = self.machine
+        for job in self.jobs.values():
+            job.scheduler.submit_all(job.graph.tasks)
+        for job in self.jobs.values():
+            self._dispatch(job)
+        for job in self.jobs.values():
+            for w in job.spinning_workers():
+                self._poll(job, w)
+            if job.policy.uses_predictions:
+                self._push(self.now + job.spec.prediction_rate_s, _TICK,
+                           job.name)
+        events = 0
+        while self._heap:
+            events += 1
+            if events > max_events:
+                raise RuntimeError("simulator exceeded max_events")
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = t
+            if kind == _FINISH:
+                self._on_finish(*payload)
+            elif kind == _TICK:
+                self._on_tick(payload)
+            elif kind == _RESUME:
+                self._on_resume(*payload)
+            elif kind == _SPIN_EXPIRE:
+                self._on_spin_expire(*payload)
+            if all(j.done for j in self.jobs.values()):
+                break
+        reports = {}
+        for job in self.jobs.values():
+            if not job.done:
+                raise RuntimeError(
+                    f"job {job.name!r} deadlocked with "
+                    f"{job.scheduler.pending} pending tasks")
+            t_end = job.t_done if job.t_done is not None else self.now
+            job.energy.finish(t_end)
+            reports[job.name] = self._report(job)
+        return reports
+
+    def _report(self, job: _SimJob) -> SimReport:
+        acc = job.monitor.accuracy_report() if job.monitor else None
+        return SimReport(
+            name=job.name,
+            policy=job.spec.policy,
+            makespan=job.energy.elapsed(),
+            energy=job.energy.energy(),
+            edp=job.energy.edp(),
+            state_seconds={s.value: v
+                           for s, v in job.energy.state_seconds().items()},
+            tasks_completed=(job.monitor.completed_instances()
+                             if job.monitor else len(job.graph.tasks)),
+            resumes=job.manager.resumes,
+            idles=job.manager.idles,
+            dlb_calls=(self.broker.job_calls(job.name)
+                       if self.broker else 0),
+            predictions=(job.predictor.predictions_made
+                         if job.predictor else 0),
+            accuracy=acc,
+            monitor_events=job.monitor_events,
+        )
+
+    # -- event handlers -----------------------------------------------------------
+
+    def _on_finish(self, job_name: str, cpu: int, task: Task,
+                   elapsed: float) -> None:
+        job = self.jobs[job_name]
+        job.manager.task_finished(cpu)
+        newly = job.scheduler.complete(task, elapsed)
+        if job.monitor is not None:
+            job.monitor_events += 3  # ready/execute/complete round trip
+        if job.scheduler.drained():
+            job.t_done = self.now
+        if newly:
+            self._work_added(job)
+        if job.manager.states().get(cpu) is not WorkerState.SPIN:
+            # _work_added's instant dispatch already handed this worker a
+            # new task (it was spinning the moment the queue refilled).
+            return
+        # Borrowed CPU honoring a reclaim flag returns at task boundary.
+        if (self.broker is not None and cpu in job.borrowed
+                and self.broker.cpu_must_return(cpu)):
+            self._return_borrowed(job, cpu)
+            return
+        # LeWI-style eager acquisition happens at every task boundary while
+        # ready work remains (this is what makes LeWI's call count explode
+        # for fine-grained tasks — paper Table 3).  The call overhead
+        # delays this worker's next poll.
+        if (job.sharing and job.policy.eager_acquire
+                and job.scheduler.ready_count > 0):
+            assert self.broker is not None
+            before = self.broker.job_calls(job.name)
+            self._acquire(job, 1, eager=True)
+            n_calls = self.broker.job_calls(job.name) - before
+            if n_calls:
+                self._push(self.now + n_calls * self.machine.dlb_call_overhead,
+                           _RESUME, (job.name, cpu))
+                return
+        self._poll(job, cpu)
+
+    def _on_tick(self, job_name: str) -> None:
+        job = self.jobs[job_name]
+        if job.done:
+            return  # stop rescheduling; lets the loop terminate
+        job.policy.on_prediction_tick()
+        # Trim: re-evaluate spinning workers against the fresh Δ.
+        for w in job.spinning_workers():
+            if job.scheduler.ready_count > 0:
+                break
+            decision = job.manager.poll_empty(w)
+            if decision is PollDecision.LEND:
+                self._lend(job, w)
+        # Grow: resume idle workers / acquire broker CPUs — one call.
+        ready = job.scheduler.ready_count
+        if ready > 0:
+            self._resume_workers(job, job.manager.notify_added(ready))
+        if job.sharing and not job.policy.eager_acquire:
+            assert isinstance(job.policy, SharingPolicy)
+            target = job.policy.acquire_target(job.manager.active,
+                                               job.scheduler.ready_count)
+            # The centralized heuristic peeks DLB's free-CPU counter
+            # (cheap shared-memory read, not a DLB call) before paying
+            # for an acquisition round-trip.
+            if target > 0 and (self.broker.pool_size() > 0
+                               or self.broker.lent_out(job.name) > 0):
+                self._acquire(job, target, eager=False)
+        self._push(self.now + job.spec.prediction_rate_s, _TICK, job.name)
+
+    def _on_resume(self, job_name: str, cpu: int) -> None:
+        job = self.jobs[job_name]
+        job.waking.discard(cpu)
+        if job.manager.states().get(cpu) is WorkerState.SPIN:
+            self._poll(job, cpu)
+
+    def _on_spin_expire(self, job_name: str, cpu: int, epoch: int) -> None:
+        job = self.jobs[job_name]
+        if job.epoch.get(cpu) != epoch:
+            return  # stale: worker ran a task / changed state meanwhile
+        if job.manager.states().get(cpu) is not WorkerState.SPIN:
+            return
+        if job.scheduler.ready_count > 0:
+            return  # work arrived; dispatch already handled it
+        budget = getattr(job.policy, "spin_budget", 1)
+        decision = job.manager.poll_empty(cpu, spin_count_override=budget)
+        if decision is PollDecision.LEND:
+            self._lend(job, cpu)
+
+    # -- mechanics ----------------------------------------------------------------
+
+    def _poll(self, job: _SimJob, cpu: int) -> None:
+        task = job.scheduler.poll()
+        if task is not None:
+            self._start(job, cpu, task)
+            return
+        decision = job.manager.poll_empty(cpu)
+        if decision is PollDecision.SPIN:
+            budget = getattr(job.policy, "spin_budget", None)
+            if budget is not None:
+                job.epoch[cpu] += 1
+                self._push(self.now + budget * self.machine.poll_interval,
+                           _SPIN_EXPIRE, (job.name, cpu, job.epoch[cpu]))
+        elif decision is PollDecision.LEND:
+            self._lend(job, cpu)
+        # IDLE: state transition already applied by the manager.
+
+    def _start(self, job: _SimJob, cpu: int, task: Task) -> None:
+        if task.service_time is None:
+            raise ValueError(
+                f"task {task.type_name}#{task.task_id} has no service_time "
+                "(required by the simulator)")
+        job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
+        job.manager.task_started(cpu)
+        dur = self.machine.service_time(task.service_time)
+        if job.monitor is not None:
+            dur += 3 * self.machine.monitor_event_overhead
+        self._push(self.now + dur, _FINISH, (job.name, cpu, task, dur))
+
+    def _dispatch(self, job: _SimJob) -> None:
+        """Hand ready tasks to spinning workers instantly."""
+        while job.scheduler.ready_count > 0:
+            spinners = job.spinning_workers()
+            if not spinners:
+                return
+            task = job.scheduler.poll()
+            if task is None:
+                return
+            self._start(job, spinners[0], task)
+
+    def _work_added(self, job: _SimJob) -> None:
+        self._dispatch(job)
+        ready = job.scheduler.ready_count
+        if ready > 0:
+            self._resume_workers(job, job.manager.notify_added(ready))
+        if job.sharing and job.policy.eager_acquire:
+            assert isinstance(job.policy, SharingPolicy)
+            target = job.policy.acquire_target(job.manager.active,
+                                               job.scheduler.ready_count)
+            if target > 0:
+                self._acquire(job, target, eager=True)
+
+    def _resume_workers(self, job: _SimJob, woken: list[int]) -> None:
+        for w in woken:
+            job.waking.add(w)
+            self._push(self.now + self.machine.resume_latency, _RESUME,
+                       (job.name, w))
+
+    # -- DLB mechanics ---------------------------------------------------------------
+
+    def _lend(self, job: _SimJob, cpu: int) -> None:
+        assert self.broker is not None
+        job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
+        was_borrowed = cpu in job.borrowed
+        holder = self.broker.lend(job.name, cpu)
+        if was_borrowed:
+            job.borrowed.discard(cpu)
+            job.manager.remove_worker(cpu)
+            job.energy.set_state(cpu, CoreState.OFF, self.now)
+            if holder:
+                self._hand_cpu_to(self.jobs[holder], cpu)
+        # Owned CPU stays registered as LENT (energy OFF) in our manager.
+
+    def _return_borrowed(self, job: _SimJob, cpu: int) -> None:
+        assert self.broker is not None
+        owner_name = self.broker.return_cpu(job.name, cpu)
+        job.borrowed.discard(cpu)
+        job.manager.remove_worker(cpu)
+        job.energy.set_state(cpu, CoreState.OFF, self.now)
+        self._hand_cpu_to(self.jobs[owner_name], cpu)
+
+    def _hand_cpu_to(self, job: _SimJob, cpu: int) -> None:
+        """CPU (re)arrives at ``job`` after the DLB hand-over latency."""
+        if cpu in job.manager.states():
+            job.manager.reclaim(cpu)
+        else:
+            job.borrowed.add(cpu)
+            job.manager.add_worker(cpu)
+        job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
+        job.waking.add(cpu)
+        self._push(self.now + self.machine.borrow_latency, _RESUME,
+                   (job.name, cpu))
+
+    def _acquire(self, job: _SimJob, target: int, eager: bool) -> None:
+        assert self.broker is not None
+        got: list[int] = []
+        if eager:
+            # LeWI-style: one broker call per CPU (per-thread acquisition).
+            for _ in range(target):
+                batch = self.broker.acquire(job.name, 1)
+                if not batch:
+                    break
+                got.extend(batch)
+        else:
+            got = self.broker.acquire(job.name, target)
+        for cpu in got:
+            self._hand_cpu_to(job, cpu)
+        if len(got) < target and self.broker.lent_out(job.name) > 0:
+            # Pool exhausted but our own CPUs are borrowed: flag a reclaim.
+            back = self.broker.reclaim(job.name)
+            for cpu in back:
+                self._hand_cpu_to(job, cpu)
+
+
+class SimExecutor:
+    """Convenience wrapper: run ONE task graph under ONE policy."""
+
+    def __init__(self, machine: MachineModel, policy: str = "busy",
+                 n_cpus: int | None = None, monitoring: bool | None = None,
+                 prediction_rate_s: float = DEFAULT_PREDICTION_RATE_S,
+                 spin_budget: int = 100, min_samples: int = 4,
+                 power: PowerModel | None = None) -> None:
+        self.machine = machine
+        self.spec = SimJobSpec(
+            name="job0", graph=TaskGraph(), policy=policy,
+            cpus=list(range(n_cpus if n_cpus is not None
+                            else machine.n_cores)),
+            monitoring=monitoring, prediction_rate_s=prediction_rate_s,
+            spin_budget=spin_budget, min_samples=min_samples, power=power)
+
+    def run(self, graph: TaskGraph) -> SimReport:
+        self.spec.graph = graph
+        cluster = SimCluster(self.machine)
+        cluster.add_job(self.spec)
+        return cluster.run()[self.spec.name]

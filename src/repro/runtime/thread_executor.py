@@ -1,0 +1,168 @@
+"""Real threaded executor.
+
+Runs task graphs with actual Python threads — the correctness twin of the
+simulator (same Scheduler / WorkerManager / Policy / TaskMonitor objects).
+Python's GIL means no true parallel speedup on this host; the executor
+exists to validate the concurrency logic (locking, idle/resume protocol,
+monitor event ordering) under real preemption, and to measure the *real*
+bookkeeping overhead of the monitoring infrastructure
+(``benchmarks/bench_overhead.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from ..core.energy import CoreState, EnergyMeter, PowerModel
+from ..core.manager import WorkerManager, WorkerState
+from ..core.monitoring import AccuracyReport, TaskMonitor
+from ..core.policies import Policy, PollDecision, make_policy
+from ..core.prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
+                               PredictionConfig)
+from .scheduler import Scheduler
+from .task import TaskGraph
+
+__all__ = ["ThreadExecutor", "ExecutorReport"]
+
+
+@dataclass(frozen=True)
+class ExecutorReport:
+    policy: str
+    makespan: float
+    energy: float
+    edp: float
+    tasks_completed: int
+    resumes: int
+    idles: int
+    predictions: int
+    accuracy: AccuracyReport | None
+
+
+class ThreadExecutor:
+    def __init__(self, n_workers: int, policy: str = "busy",
+                 monitoring: bool | None = None,
+                 prediction_rate_s: float = 1e-3,
+                 spin_budget: int = 100,
+                 min_samples: int = 4,
+                 power: PowerModel | None = None) -> None:
+        if n_workers < 1:
+            raise ValueError("need at least one worker")
+        self.n_workers = n_workers
+        self.policy_name = policy
+        needs_monitor = policy == "prediction" or bool(monitoring)
+        self.monitor = TaskMonitor(min_samples=min_samples) \
+            if needs_monitor else None
+        self.scheduler = Scheduler(self.monitor)
+        self.predictor: CPUPredictor | None = None
+        if policy == "prediction":
+            assert self.monitor is not None
+            self.predictor = CPUPredictor(
+                self.monitor, n_cpus=n_workers,
+                config=PredictionConfig(rate_s=prediction_rate_s,
+                                        min_samples=min_samples))
+        self.policy: Policy = make_policy(policy, self.predictor,
+                                          spin_budget)
+        self.prediction_rate_s = prediction_rate_s
+        self._t0 = time.perf_counter()
+        self.energy = EnergyMeter(n_workers, power, t0=0.0)
+        self.manager = WorkerManager(
+            n_workers, self.policy, clock=self._clock, energy=self.energy)
+        self._cv = threading.Condition()
+        self._shutdown = False
+
+    def _clock(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # -- worker loop -----------------------------------------------------------
+
+    def _worker(self, wid: int) -> None:
+        while True:
+            task = self.scheduler.poll()
+            if task is not None:
+                self.manager.task_started(wid)
+                t0 = time.perf_counter()
+                if task.fn is not None:
+                    task.fn()
+                elif task.service_time is not None:
+                    time.sleep(task.service_time)
+                elapsed = time.perf_counter() - t0
+                self.manager.task_finished(wid)
+                newly = self.scheduler.complete(task, elapsed)
+                if newly:
+                    self._on_work_added()
+                if self.scheduler.drained():
+                    self._finish()
+                continue
+            if self._shutdown:
+                return
+            decision = self.manager.poll_empty(wid)
+            if decision is PollDecision.SPIN:
+                time.sleep(0)  # yield the GIL
+                continue
+            if decision is PollDecision.IDLE:
+                with self._cv:
+                    while (self.manager.state(wid) is WorkerState.IDLE
+                           and not self._shutdown):
+                        self._cv.wait(timeout=0.05)
+                continue
+            raise RuntimeError(
+                "LEND decisions need a broker-aware executor (use the "
+                "simulator for DLB experiments)")
+
+    def _on_work_added(self) -> None:
+        woken = self.manager.notify_added(self.scheduler.ready_count)
+        if woken:
+            with self._cv:
+                self._cv.notify_all()
+
+    def _finish(self) -> None:
+        self._shutdown = True
+        with self._cv:
+            self._cv.notify_all()  # unpark idle workers so they can exit
+
+    def _ticker(self) -> None:
+        while not self._shutdown:
+            time.sleep(self.prediction_rate_s)
+            if self._shutdown:
+                return
+            self.policy.on_prediction_tick()
+            if self.policy.uses_predictions:
+                self.manager.reevaluate_spinners()
+            # Anti-starvation: if ready work exists, apply the resume path.
+            if self.scheduler.ready_count > 0:
+                self._on_work_added()
+
+    # -- public API -----------------------------------------------------------------
+
+    def run(self, graph: TaskGraph) -> ExecutorReport:
+        self.scheduler.submit_all(graph.tasks)
+        threads = [threading.Thread(target=self._worker, args=(w,),
+                                    name=f"worker-{w}", daemon=True)
+                   for w in range(self.n_workers)]
+        ticker = threading.Thread(target=self._ticker, name="ticker",
+                                  daemon=True)
+        start = time.perf_counter()
+        for t in threads:
+            t.start()
+        ticker.start()
+        for t in threads:
+            t.join()
+        ticker.join()
+        makespan = time.perf_counter() - start
+        self.energy.finish(self._clock())
+        acc = self.monitor.accuracy_report() if self.monitor else None
+        return ExecutorReport(
+            policy=self.policy_name,
+            makespan=makespan,
+            energy=self.energy.energy(),
+            edp=self.energy.energy() * makespan,
+            tasks_completed=(self.monitor.completed_instances()
+                             if self.monitor else len(graph.tasks)),
+            resumes=self.manager.resumes,
+            idles=self.manager.idles,
+            predictions=(self.predictor.predictions_made
+                         if self.predictor else 0),
+            accuracy=acc,
+        )

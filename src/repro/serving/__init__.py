@@ -1,0 +1,7 @@
+"""Serving tier: continuous-batching engine + prediction-based
+autoscaling (the paper's Algorithm 1/2 applied to serving replicas)."""
+
+from .engine import Request, ServingEngine
+from .autoscale import AutoScaler
+
+__all__ = ["Request", "ServingEngine", "AutoScaler"]

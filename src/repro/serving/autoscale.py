@@ -1,0 +1,52 @@
+"""Prediction-based replica autoscaling — Algorithm 1 applied to serving.
+
+A serving deployment holds up to ``max_replicas`` engine replicas.  The
+monitoring infrastructure aggregates request workloads (cost = prompt +
+expected new tokens, normalized by measured service times into unitary
+costs α), and the :class:`~repro.core.prediction.CPUPredictor` computes
+the optimal replica count Δ at the prediction rate — the serving twin of
+the paper's CPU manager:
+
+* **busy**   — all replicas always hot (max throughput, max energy)
+* **idle**   — replicas park the moment they have no work
+* **prediction** — replicas track Δ
+
+Replica lifecycle costs (model load / cache warmup) play the role of the
+paper's thread resume latency; the EDP trade-off reproduces Fig. 4's
+story at serving granularity (``benchmarks/bench_serving.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.monitoring import TaskMonitor
+from ..core.prediction import CPUPredictor, PredictionConfig
+
+__all__ = ["AutoScaler"]
+
+
+@dataclass
+class AutoScaler:
+    monitor: TaskMonitor
+    max_replicas: int
+    policy: str = "prediction"          # busy | idle | prediction
+    min_replicas: int = 1
+    rate_s: float = 0.05
+
+    def __post_init__(self) -> None:
+        self.predictor = CPUPredictor(
+            self.monitor, n_cpus=self.max_replicas,
+            config=PredictionConfig(rate_s=self.rate_s, min_samples=3))
+
+    def target(self, queued: int, active: int) -> int:
+        """Replicas to keep hot, given current queue/active request counts."""
+        if self.policy == "busy":
+            return self.max_replicas
+        if self.policy == "idle":
+            return max(self.min_replicas if queued + active else 0,
+                       min(queued + active, self.max_replicas))
+        delta = self.predictor.tick()
+        if queued + active == 0:
+            return 0
+        return max(self.min_replicas, min(delta, self.max_replicas))

@@ -1,0 +1,7 @@
+"""Training tier: step functions, the elastic controller (the paper's
+predictor applied to DP replica scaling), straggler mitigation, and
+gradient compression."""
+
+from .steps import StepConfig, make_train_step, make_serve_step
+
+__all__ = ["StepConfig", "make_train_step", "make_serve_step"]

@@ -1,0 +1,103 @@
+"""Elastic data parallelism driven by the paper's predictor.
+
+The controller treats DP replicas the way the paper's CPU manager treats
+cores: the *workload* is the backlog of pending global batches (each a
+task with cost = tokens), α is the EMA'd per-replica step time, and
+Algorithm 1 yields the replica count Δ for the next window.  Alg. 2's
+poll/add hooks become ``on_step_done`` / ``on_batches_queued``.
+
+Node failures are forced shrinks: the failed replica leaves the set and
+the global batch is re-balanced over survivors (batch size per replica
+grows; the gradient all-reduce group shrinks).  Growth re-admits
+replicas up to Δ.  ``tests/test_elastic.py`` exercises shrink/regrow and
+loss continuity across a failure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.monitoring import TaskMonitor
+from ..core.prediction import CPUPredictor, PredictionConfig
+
+__all__ = ["ElasticController", "ReplicaSet"]
+
+
+@dataclass
+class ReplicaSet:
+    """Active replica ids + the batch split they own."""
+
+    replicas: list[int]
+    global_batch: int
+
+    def shards(self) -> dict[int, int]:
+        n = len(self.replicas)
+        base = self.global_batch // n
+        extra = self.global_batch % n
+        return {r: base + (1 if i < extra else 0)
+                for i, r in enumerate(self.replicas)}
+
+
+class ElasticController:
+    def __init__(self, max_replicas: int, global_batch: int,
+                 policy: str = "prediction", rate_s: float = 1.0,
+                 min_replicas: int = 1) -> None:
+        self.max_replicas = max_replicas
+        self.min_replicas = min_replicas
+        self.policy = policy
+        self.monitor = TaskMonitor(min_samples=3)
+        self.predictor = CPUPredictor(
+            self.monitor, n_cpus=max_replicas,
+            config=PredictionConfig(rate_s=rate_s, min_samples=3))
+        self.set = ReplicaSet(list(range(max_replicas)), global_batch)
+        self.failed: set[int] = set()
+        self._task_seq = 0
+        self.resizes: list[tuple[int, int]] = []   # (step, new_count)
+
+    # -- workload hooks (Alg. 2's POLL/ADD analogues) -----------------------
+
+    def on_batches_queued(self, n: int, tokens_per_batch: float) -> None:
+        for _ in range(n):
+            self._task_seq += 1
+            self.monitor.on_task_ready(self._task_seq, "global_batch",
+                                       tokens_per_batch)
+            self.monitor.on_task_execute(self._task_seq, "global_batch",
+                                         tokens_per_batch)
+
+    def on_step_done(self, task_id_offset: int, tokens: float,
+                     elapsed: float) -> None:
+        self.monitor.on_task_completed(task_id_offset, "global_batch",
+                                       tokens, elapsed)
+
+    # -- membership ------------------------------------------------------------
+
+    def fail_replica(self, rid: int, step: int) -> ReplicaSet:
+        """Node loss: forced shrink + rebalance."""
+        self.failed.add(rid)
+        survivors = [r for r in self.set.replicas if r != rid]
+        if len(survivors) < self.min_replicas:
+            raise RuntimeError("lost too many replicas")
+        self.set = ReplicaSet(survivors, self.set.global_batch)
+        self.resizes.append((step, len(survivors)))
+        return self.set
+
+    def resize_to_prediction(self, step: int) -> ReplicaSet:
+        """Apply Δ (prediction policy) or keep everything (busy)."""
+        if self.policy == "busy":
+            want = self.max_replicas
+        else:
+            want = self.predictor.tick()
+        want = max(self.min_replicas,
+                   min(want, self.max_replicas - len(self.failed)))
+        cur = self.set.replicas
+        if want < len(cur):
+            new = cur[:want]
+        elif want > len(cur):
+            pool = [r for r in range(self.max_replicas)
+                    if r not in self.failed and r not in cur]
+            new = cur + pool[:want - len(cur)]
+        else:
+            return self.set
+        self.set = ReplicaSet(new, self.set.global_batch)
+        self.resizes.append((step, len(new)))
+        return self.set

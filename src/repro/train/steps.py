@@ -1,0 +1,116 @@
+"""jit-able step functions: train (loss→grad→clip→AdamW) and serve
+(one decode token, greedy).
+
+The train step consumes a *microbatched* batch ``(accum, micro_B, S)`` and
+scans over the accumulation dimension, so activation residuals are bounded
+by the microbatch while the gradient all-reduce (DP) happens once — the
+standard large-scale arrangement.  Gradients accumulate in
+``cfg.grad_dtype`` (f32 default; bf16 for the 400B config to fit HBM).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import ModelConfig, Rules, decode_step, lm_loss
+from ..optim import AdamWConfig, adamw_update, clip_by_global_norm, \
+    cosine_warmup
+
+__all__ = ["StepConfig", "make_train_step", "make_serve_step"]
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    accum: int = 1                 # gradient-accumulation steps
+    grad_dtype: str = "float32"    # accumulation dtype
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    #: int8-quantize gradients (with error feedback) before the DP
+    #: all-reduce / optimizer — opt_state must carry an "ef" tree
+    compress: bool = False
+
+
+def make_train_step(cfg: ModelConfig, rules: Rules | None,
+                    opt_cfg: AdamWConfig, step_cfg: StepConfig):
+    """Returns ``train_step(params, opt_state, step, batch) ->
+    (params, opt_state, metrics)``.
+
+    ``batch``: {"tokens": (A, B, S_tok) i32, "labels": (A, B, S) i32
+    [, "prefix": (A, B, F, d) bf16]} — A = accumulation steps.
+    """
+    gdt = jnp.dtype(step_cfg.grad_dtype)
+
+    def loss_fn(params, tokens, labels, prefix):
+        return lm_loss(params, tokens, labels, cfg, rules, prefix=prefix)
+
+    def train_step(params, opt_state, step, batch):
+        prefix_all = batch.get("prefix")
+
+        if step_cfg.accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, batch["tokens"][0], batch["labels"][0],
+                None if prefix_all is None else prefix_all[0])
+            grads = jax.tree.map(lambda g: g.astype(gdt), grads)
+        else:
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdt), params)
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                if prefix_all is None:
+                    toks, labs = xs
+                    pfx = None
+                else:
+                    toks, labs, pfx = xs
+                l, g = jax.value_and_grad(loss_fn)(params, toks, labs, pfx)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(gdt), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            xs = (batch["tokens"], batch["labels"]) if prefix_all is None \
+                else (batch["tokens"], batch["labels"], prefix_all)
+            (grads, loss), _ = lax.scan(
+                micro, (zero, jnp.zeros((), jnp.float32)), xs)
+            inv = 1.0 / step_cfg.accum
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+
+        ef_new = None
+        if step_cfg.compress:
+            from .compression import compress_grads
+            grads, ef_new = compress_grads(grads, opt_state["ef"])
+        grads, gnorm = clip_by_global_norm(grads, step_cfg.clip_norm)
+        lr_scale = cosine_warmup(step, warmup=step_cfg.warmup,
+                                 total=step_cfg.total_steps)
+        adam_state = {k: v for k, v in opt_state.items() if k != "ef"}
+        params, adam_state = adamw_update(grads, adam_state, params,
+                                          opt_cfg, lr_scale)
+        if ef_new is not None:
+            adam_state["ef"] = ef_new
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return params, adam_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Rules | None):
+    """Returns ``serve_step(params, token, pos, cache) ->
+    (next_token, cache)`` — one greedy decode step."""
+
+    def serve_step(params, token, pos, cache):
+        logits, cache = decode_step(params, token, pos, cache, cfg, rules)
+        # Mask the padded vocab tail before argmax.
+        Vp = logits.shape[-1]
+        if Vp != cfg.vocab:
+            neg = jnp.full((Vp - cfg.vocab,), -jnp.inf, logits.dtype)
+            logits = logits.at[..., cfg.vocab:].set(neg)
+        return jnp.argmax(logits, axis=-1).astype(token.dtype), cache
+
+    return serve_step

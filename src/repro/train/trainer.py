@@ -1,0 +1,116 @@
+"""End-to-end trainer: data pipeline → jit'd step → checkpoint/restart,
+with straggler monitoring, elastic hooks and optional gradient
+compression.  This is what ``examples/train_lm.py`` and
+``python -m repro.launch.train`` drive.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..data import SyntheticLM
+from ..models import ModelConfig, Rules, init_params
+from ..optim import AdamWConfig, adamw_init
+from .compression import compress_grads, init_error_feedback
+from .steps import StepConfig, make_train_step
+from .straggler import StragglerMonitor
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    compress: bool = False
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    step: StepConfig = field(default_factory=StepConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 rules: Rules | None = None) -> None:
+        self.cfg = cfg
+        self.tcfg = tcfg
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = init_params(key, cfg)
+        self.opt_state = adamw_init(self.params, tcfg.opt)
+        step_cfg = tcfg.step
+        if tcfg.compress:
+            step_cfg = StepConfig(**{**step_cfg.__dict__,
+                                     "compress": True})
+            self.opt_state["ef"] = init_error_feedback(self.params)
+        self.step = 0
+        self.straggler = StragglerMonitor()
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir) \
+            if tcfg.checkpoint_dir else None
+        self._step = make_train_step(cfg, rules, tcfg.opt, step_cfg)
+        self._jit_step = jax.jit(self._step, donate_argnums=(0, 1))
+        self.data = SyntheticLM(
+            vocab=cfg.vocab, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, accum=tcfg.step.accum,
+            frontend_len=cfg.frontend_len, d_model=cfg.d_model,
+            seed=tcfg.seed)
+        self.history: list[dict] = []
+
+    # -- restart ----------------------------------------------------------
+
+    def maybe_restore(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        state, step = self.ckpt.restore(state)
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step = step
+        return True
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, steps: int | None = None) -> list[dict]:
+        steps = steps if steps is not None else self.tcfg.steps
+        target = self.step + steps
+        while self.step < target:
+            batch_np = next(self.data)
+            batch = {"tokens": jnp.asarray(batch_np.tokens),
+                     "labels": jnp.asarray(batch_np.labels)}
+            if batch_np.prefix is not None:
+                batch["prefix"] = jnp.asarray(batch_np.prefix,
+                                              jnp.bfloat16)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state,
+                jnp.asarray(self.step, jnp.int32), batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.straggler.observe(0, dt)
+            self.step += 1
+            rec = {"step": self.step, "loss": loss, "dt": dt,
+                   "grad_norm": float(metrics["grad_norm"])}
+            self.history.append(rec)
+            if self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if (self.ckpt is not None
+                    and self.step % self.tcfg.checkpoint_every == 0):
+                self.ckpt.save(self.step,
+                               {"params": self.params,
+                                "opt": self.opt_state},
+                               blocking=False)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.history
+
+    def close(self) -> None:
+        self.data.close()

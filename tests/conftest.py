@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device — the 512-device dry-run flag
+# must NOT leak here (only repro.launch.dryrun sets it, in-process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

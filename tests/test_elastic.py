@@ -1,0 +1,95 @@
+"""Elastic controller + straggler mitigation."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.train.elastic import ElasticController, ReplicaSet
+from repro.train.straggler import StragglerMonitor
+
+
+class TestReplicaSet:
+    @given(st.integers(1, 64), st.integers(1, 1024))
+    @settings(max_examples=100, deadline=None)
+    def test_shards_conserve_batch(self, n, batch):
+        rs = ReplicaSet(list(range(n)), batch)
+        shards = rs.shards()
+        assert sum(shards.values()) == batch
+        assert max(shards.values()) - min(shards.values()) <= 1
+
+
+class TestElasticController:
+    def _seed(self, c: ElasticController, step_time=0.1, n=6):
+        for i in range(n):
+            c.on_batches_queued(1, tokens_per_batch=1000.0)
+            c.on_step_done(c._task_seq, 1000.0, step_time)
+
+    def test_failure_shrinks_and_rebalances(self):
+        c = ElasticController(max_replicas=8, global_batch=256)
+        new = c.fail_replica(3, step=10)
+        assert 3 not in new.replicas and len(new.replicas) == 7
+        assert sum(new.shards().values()) == 256
+
+    def test_prediction_shrinks_when_idle(self):
+        c = ElasticController(max_replicas=8, global_batch=64,
+                              rate_s=0.1)
+        self._seed(c)
+        # no queued work ⇒ Δ collapses to 1
+        rs = c.resize_to_prediction(step=1)
+        assert len(rs.replicas) == 1
+
+    def test_prediction_grows_with_backlog(self):
+        c = ElasticController(max_replicas=8, global_batch=64,
+                              rate_s=0.1)
+        self._seed(c, step_time=0.1)
+        # 8 batches × 0.1 s backlog over a 0.1 s window ⇒ want 8 replicas
+        c.on_batches_queued(8, tokens_per_batch=1000.0)
+        c.set = ReplicaSet([0], 64)
+        rs = c.resize_to_prediction(step=2)
+        assert len(rs.replicas) == 8
+
+    def test_failed_never_readmitted(self):
+        c = ElasticController(max_replicas=4, global_batch=32)
+        c.fail_replica(2, step=0)
+        self._seed(c)
+        c.on_batches_queued(16, tokens_per_batch=1000.0)
+        rs = c.resize_to_prediction(step=1)
+        assert 2 not in rs.replicas
+        assert len(rs.replicas) <= 3
+
+    def test_busy_policy_keeps_everything(self):
+        c = ElasticController(max_replicas=6, global_batch=32,
+                              policy="busy")
+        self._seed(c)
+        assert len(c.resize_to_prediction(0).replicas) == 6
+
+
+class TestStraggler:
+    def test_detects_slow_worker(self):
+        m = StragglerMonitor(threshold=1.5)
+        for _ in range(6):
+            for w in range(7):
+                m.observe(w, 0.10)
+            m.observe(7, 0.30)
+        assert m.sweep() == {7}
+        assert m.is_straggler(7)
+        assert not m.is_straggler(0)
+
+    def test_cooldown_readmission(self):
+        m = StragglerMonitor(threshold=1.5, cooldown=3)
+        for _ in range(6):
+            for w in range(3):
+                m.observe(w, 0.10)
+            m.observe(3, 0.50)
+        assert m.sweep() == {3}
+        # the worker recovers; EMA drifts back under the threshold
+        for _ in range(30):
+            for w in range(3):
+                m.observe(w, 0.10)
+            m.observe(3, 0.10)
+        assert 3 not in m.drained
+
+    def test_no_flags_with_uniform_fleet(self):
+        m = StragglerMonitor()
+        for _ in range(10):
+            for w in range(16):
+                m.observe(w, 0.1)
+        assert m.sweep() == set()

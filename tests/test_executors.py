@@ -1,0 +1,183 @@
+"""Executors: threaded correctness + simulator determinism & ordering."""
+
+import random
+
+import pytest
+
+from repro.core import ResourceBroker
+from repro.runtime import (KNL, MN4, SimCluster, SimExecutor, SimJobSpec,
+                           Task, TaskGraph, ThreadExecutor)
+
+
+def chain_graph(n=20, service=1e-5):
+    g = TaskGraph()
+    prev = None
+    order = []
+    for i in range(n):
+        def fn(i=i):
+            order.append(i)
+        t = Task("link", cost=1.0, fn=fn, service_time=service)
+        if prev is not None:
+            t.depends_on(prev)
+        g.add(t)
+        prev = t
+    return g, order
+
+
+def diamond_graph():
+    g = TaskGraph()
+    log = []
+    a = Task("a", fn=lambda: log.append("a"), service_time=1e-5)
+    b = Task("b", fn=lambda: log.append("b"), service_time=1e-5).depends_on(a)
+    c = Task("c", fn=lambda: log.append("c"), service_time=1e-5).depends_on(a)
+    d = Task("d", fn=lambda: log.append("d"), service_time=1e-5)
+    d.depends_on(b, c)
+    for t in (a, b, c, d):
+        g.add(t)
+    return g, log
+
+
+class TestThreadExecutor:
+    @pytest.mark.parametrize("policy", ["busy", "idle", "hybrid",
+                                        "prediction"])
+    def test_chain_order_preserved(self, policy):
+        g, order = chain_graph(30)
+        rep = ThreadExecutor(4, policy=policy,
+                             prediction_rate_s=1e-3).run(g)
+        assert order == list(range(30))
+        assert rep.tasks_completed == 30 or rep.accuracy is None
+
+    def test_diamond_dependencies(self):
+        g, log = diamond_graph()
+        ThreadExecutor(3, policy="idle").run(g)
+        assert log[0] == "a" and log[-1] == "d"
+        assert set(log[1:3]) == {"b", "c"}
+
+    def test_wide_parallel(self):
+        g = TaskGraph()
+        done = []
+        for i in range(100):
+            g.add(Task("w", fn=lambda i=i: done.append(i),
+                       service_time=1e-6))
+        rep = ThreadExecutor(8, policy="busy").run(g)
+        assert sorted(done) == list(range(100))
+        assert rep.makespan > 0
+
+
+class TestSimExecutor:
+    def test_deterministic(self):
+        r1 = SimExecutor(MN4, policy="prediction", monitoring=True).run(
+            chain_graph(50)[0])
+        r2 = SimExecutor(MN4, policy="prediction", monitoring=True).run(
+            chain_graph(50)[0])
+        assert r1.makespan == r2.makespan
+        assert r1.energy == r2.energy
+        assert r1.resumes == r2.resumes
+
+    def test_all_tasks_complete(self):
+        g, _ = diamond_graph()
+        rep = SimExecutor(KNL, policy="idle").run(g)
+        assert rep.makespan > 0
+
+    def test_serial_chain_time(self):
+        """A chain cannot parallelize: makespan ≈ Σ service."""
+        g, _ = chain_graph(100, service=1e-4)
+        rep = SimExecutor(MN4, policy="busy").run(g)
+        assert rep.makespan == pytest.approx(100 * 1e-4, rel=0.05)
+
+    def test_wide_speedup(self):
+        """Independent tasks parallelize over all cores."""
+        g = TaskGraph()
+        for _ in range(480):
+            g.add(Task("w", cost=1.0, service_time=1e-3))
+        rep = SimExecutor(MN4, policy="busy").run(g)
+        assert rep.makespan == pytest.approx(480 * 1e-3 / 48, rel=0.05)
+
+    def test_energy_ordering_idle_phase(self):
+        """With a long low-parallelism phase: busy burns the most energy,
+        idle the least; prediction sits between but close to idle
+        (Fig. 1's story)."""
+        def make():
+            g = TaskGraph()
+            prev = None
+            for _ in range(200):             # serial chain on 48 cores
+                t = Task("c", cost=1.0, service_time=2e-4)
+                if prev is not None:
+                    t.depends_on(prev)
+                g.add(t)
+                prev = t
+            return g
+        e = {}
+        for pol in ("busy", "idle", "prediction"):
+            e[pol] = SimExecutor(MN4, policy=pol, monitoring=True) \
+                .run(make()).energy
+        assert e["busy"] > e["prediction"] > e["idle"] * 0.9
+
+    def test_knl_slower_per_core(self):
+        g1, _ = chain_graph(50, service=1e-4)
+        g2, _ = chain_graph(50, service=1e-4)
+        t_mn4 = SimExecutor(MN4, policy="busy").run(g1).makespan
+        t_knl = SimExecutor(KNL, policy="busy").run(g2).makespan
+        assert t_knl > t_mn4 * 1.4           # 1/0.62 ≈ 1.61
+
+
+class TestSimDLB:
+    def test_two_jobs_share(self):
+        rng = random.Random(0)
+        broker = ResourceBroker()
+        cl = SimCluster(MN4, broker=broker)
+
+        g1 = TaskGraph()        # bursty job: idle gaps lend CPUs
+        prev = None
+        for _ in range(20):
+            t = Task("burst", cost=1.0, service_time=5e-4)
+            if prev is not None:
+                t.depends_on(prev)
+            g1.add(t)
+            prev = t
+        g2 = TaskGraph()        # saturating job: wants more CPUs
+        for _ in range(2000):
+            g2.add(Task("sat", cost=1.0,
+                        service_time=rng.uniform(4e-5, 6e-5)))
+        cl.add_job(SimJobSpec(name="burst", graph=g1, policy="dlb-lewi",
+                              cpus=list(range(24))))
+        cl.add_job(SimJobSpec(name="sat", graph=g2, policy="dlb-lewi",
+                              cpus=list(range(24, 48))))
+        reps = cl.run()
+        # the saturating job borrowed CPUs ⇒ faster than 24-core ideal
+        ideal_24 = 2000 * 5e-5 / 24
+        assert reps["sat"].makespan < ideal_24
+        assert broker.total_calls > 0
+
+    def test_prediction_fewer_calls_than_lewi(self):
+        def run(policy):
+            rng = random.Random(1)
+            broker = ResourceBroker()
+            cl = SimCluster(MN4, broker=broker)
+            g1 = TaskGraph()
+            prev = None
+            for _ in range(30):
+                wave = [Task("gs", cost=1.0,
+                             service_time=rng.uniform(1e-4, 3e-4))
+                        for _ in range(30)]
+                for t in wave:
+                    if prev is not None:
+                        t.depends_on(prev)
+                    g1.add(t)
+                bar = Task("bar", cost=0.01, service_time=1e-6)
+                for t in wave:
+                    bar.depends_on(t)
+                g1.add(bar)
+                prev = bar
+            g2 = TaskGraph()
+            for _ in range(3000):
+                g2.add(Task("st", cost=1.0,
+                            service_time=rng.uniform(4e-5, 6e-5)))
+            cl.add_job(SimJobSpec(name="g", graph=g1, policy=policy,
+                                  cpus=list(range(24))))
+            cl.add_job(SimJobSpec(name="s", graph=g2, policy=policy,
+                                  cpus=list(range(24, 48))))
+            cl.run()
+            return broker.total_calls
+
+        assert run("dlb-prediction") < run("dlb-lewi") / 2

@@ -1,0 +1,182 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over
+shapes/dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+pytestmark = pytest.mark.kernels
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 256, 4, 1, 128),     # MQA
+    (2, 128, 2, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, S, H, K, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D), dtype)
+    o_ref = ref.attention_ref(q, k, v)
+    o = ops.attention(q, k, v, impl="interpret", block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    o_ref = ref.attention_ref(q, k, v, window=window)
+    o = ops.attention(q, k, v, window=window, impl="interpret",
+                      block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)) * 3
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)) * 3
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    o_ref = ref.attention_ref(q, k, v, softcap=20.0)
+    o = ops.attention(q, k, v, softcap=20.0, impl="interpret",
+                      block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_shape_independence():
+    """Different tilings must give identical results."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    o1 = ops.attention(q, k, v, impl="interpret", block_q=64, block_k=64)
+    o2 = ops.attention(q, k, v, impl="interpret", block_q=128,
+                       block_k=256)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,S,N", [(1, 2, 64, 64), (2, 4, 128, 64)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_wkv6_shapes(B, H, S, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, H, S, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, S, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, S, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, H, S, N)) - 1.0))
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    y_ref, s_ref = ref.wkv6_ref(r, k, v, w, u)
+    y, s = ops.wkv(r, k, v, w, u, impl="interpret", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_initial_state_continuation():
+    """Chunked kernel over [0:S] == kernel over halves with carried
+    state (exactness of the cross-chunk recurrence)."""
+    B, H, S, N = 1, 2, 128, 64
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, H, S, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, S, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, S, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, H, S, N)) - 1.0))
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    y_full, s_full = ops.wkv(r, k, v, w, u, impl="interpret")
+    h = S // 2
+    y1, s1 = ops.wkv(r[:, :, :h], k[:, :, :h], v[:, :, :h], w[:, :, :h],
+                     u, impl="interpret")
+    y2, s2 = ops.wkv(r[:, :, h:], k[:, :, h:], v[:, :, h:], w[:, :, h:],
+                     u, s0=s1, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_full[:, :, h:]),
+                               np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_extreme_decay_stable():
+    """Strong decay (w → 0) must not produce inf/nan (the clamp)."""
+    B, H, S, N = 1, 1, 64, 64
+    ks = jax.random.split(KEY, 4)
+    r = jax.random.normal(ks[0], (B, H, S, N))
+    k = jax.random.normal(ks[1], (B, H, S, N))
+    v = jax.random.normal(ks[2], (B, H, S, N))
+    w = jnp.full((B, H, S, N), 1e-6)         # near-total decay per step
+    u = jnp.zeros((H, N))
+    y, s = ops.wkv(r, k, v, w, u, impl="interpret")
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(s)).all()
+    y_ref, _ = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,R,t_blk,r_blk", [
+    (1, 128, 256, 64, 256),
+    (2, 256, 512, 128, 128),
+    (1, 64, 1024, 64, 512),
+])
+def test_rglru_shapes(B, S, R, t_blk, r_blk):
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, R)))
+    b = jax.random.normal(ks[1], (B, S, R)) * 0.1
+    h_ref = ref.rglru_ref(a, b)
+    h, hf = ops.rglru(a, b, impl="interpret", t_blk=t_blk, r_blk=r_blk)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_initial_state():
+    B, S, R = 2, 64, 256
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, R)))
+    b = jax.random.normal(ks[1], (B, S, R)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, R))
+    h_full, _ = ops.rglru(a, b, impl="interpret", t_blk=32, r_blk=256)
+    # continuation: run first half, carry, run second half
+    h1, hf1 = ops.rglru(a[:, :32], b[:, :32], impl="interpret",
+                        t_blk=32, r_blk=256)
+    h2, _ = ops.rglru(a[:, 32:], b[:, 32:], hf1, impl="interpret",
+                      t_blk=32, r_blk=256)
+    np.testing.assert_allclose(np.asarray(h_full[:, 32:]),
+                               np.asarray(h2), rtol=1e-5, atol=1e-5)
+
+
+def test_model_uses_same_math_as_kernels():
+    """The model-side chunked WKV (XLA path) equals the kernel and the
+    scan reference — three-way agreement."""
+    from repro.models.rwkv import wkv6_chunked
+    B, H, S, N = 1, 2, 64, 64
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, H, S, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, S, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, S, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, H, S, N)) - 1.0))
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    y1, s1 = ref.wkv6_ref(r, k, v, w, u)
+    y2, s2 = wkv6_chunked(r, k, v, w, u)
+    y3, s3 = ops.wkv(r, k, v, w, u, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y3),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,65 @@
+"""Workload graph builders: structure, counts, dependency sanity."""
+
+import pytest
+
+from repro.runtime import SimExecutor, MN4
+from repro.workloads import WORKLOADS, build_cholesky
+from repro.workloads.cholesky import cholesky_task_count
+
+
+def test_cholesky_coarse_count_matches_paper():
+    g = build_cholesky(grain="coarse")
+    # paper Table 2 reports ~600 instances for coarse Cholesky
+    assert 500 <= len(g.tasks) <= 700
+    assert len(g.tasks) == cholesky_task_count(14)
+
+
+def test_cholesky_kernel_mix():
+    g = build_cholesky(grain="coarse", p=6)
+    kinds = {}
+    for t in g.tasks:
+        kinds[t.type_name] = kinds.get(t.type_name, 0) + 1
+    assert kinds["potrf"] == 6
+    assert kinds["trsm"] == 15
+    assert kinds["syrk"] == 15
+    assert kinds["gemm"] == 20
+
+
+def test_cholesky_first_task_is_potrf_root():
+    g = build_cholesky(grain="coarse", p=4)
+    roots = [t for t in g.tasks if not t.deps]
+    assert len(roots) == 1 and roots[0].type_name == "potrf"
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_graphs_acyclic_and_runnable(name):
+    kw = {}
+    if name.startswith("cholesky"):
+        kw["p"] = 6
+    elif name == "hpccg":
+        kw = dict(iterations=3, blocks=8)
+    elif name == "gauss-seidel":
+        kw = dict(steps=3, bi=4, bj=4)
+    elif name.startswith("multisaxpy"):
+        kw = dict(generations=3, blocks=16)
+    else:
+        kw = dict(rounds=2, blocks=16)
+    g = WORKLOADS[name](seed=0, **kw)
+    rep = SimExecutor(MN4, policy="busy").run(g)   # deadlock ⇒ raises
+    assert rep.makespan > 0
+
+
+def test_instance_counts_scale_like_paper():
+    """Default scales approximate paper Table 2 instance counts."""
+    assert len(WORKLOADS["hpccg"]()) >= 10_000
+    assert len(WORKLOADS["gauss-seidel"]()) >= 25_000
+    assert len(WORKLOADS["multisaxpy-fine"]()) >= 100_000
+    assert len(WORKLOADS["multisaxpy-coarse"]()) >= 20_000
+
+
+def test_costs_positive_and_proportional():
+    g = build_cholesky(grain="coarse", p=4, tile=1024)
+    by_kind = {t.type_name: t.cost for t in g.tasks}
+    assert by_kind["gemm"] == pytest.approx(2 * by_kind["trsm"])
+    assert all(t.cost > 0 for t in g.tasks)
+    assert all(t.service_time and t.service_time > 0 for t in g.tasks)
