@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.monitoring import TaskMonitor
+from repro.core import GovernorSpec, ResourceGovernor
 from repro.runtime import MN4, SimExecutor
 from repro.workloads import WORKLOADS
 
@@ -36,8 +36,8 @@ def run() -> list[dict]:
         })
         emit(rows[-1])
 
-    # real bookkeeping cost per event
-    m = TaskMonitor()
+    # real bookkeeping cost per event (monitoring-only governor stack)
+    m = ResourceGovernor(GovernorSpec(resources=1, monitoring=True)).monitor
     n = 200_000
     t0 = time.perf_counter()
     for i in range(n):

@@ -3,6 +3,7 @@ workloads × policies × machines on the simulator."""
 
 from __future__ import annotations
 
+from repro.core import GovernorSpec
 from repro.runtime import KNL, MN4, SimExecutor
 from repro.workloads import WORKLOADS
 
@@ -18,8 +19,9 @@ def run() -> list[dict]:
             reports = {}
             for policy in POLICIES:
                 g = WORKLOADS[name](seed=0, **SCALED.get(name, {}))
-                reports[policy] = SimExecutor(
-                    machine, policy=policy, monitoring=True).run(g)
+                spec = GovernorSpec(resources=machine.n_cores,
+                                    policy=policy, monitoring=True)
+                reports[policy] = SimExecutor(machine, spec=spec).run(g)
             best_t = min(r.makespan for r in reports.values())
             best_edp = min(r.edp for r in reports.values())
             for policy, r in reports.items():

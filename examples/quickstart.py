@@ -9,7 +9,7 @@ sharing cores through the DLB broker, with and without predictions.
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import ResourceBroker
+from repro.core import GovernorSpec, ResourceBroker
 from repro.runtime import MN4, SimCluster, SimExecutor, SimJobSpec
 from repro.workloads import build_gauss_seidel, build_stream
 
@@ -20,7 +20,9 @@ def policy_table() -> None:
           f"{'resumes':>8s}")
     for policy in ("busy", "idle", "hybrid", "prediction"):
         g = build_gauss_seidel(steps=30, seed=0)
-        r = SimExecutor(MN4, policy=policy, monitoring=True).run(g)
+        spec = GovernorSpec(resources=MN4.n_cores, policy=policy,
+                            monitoring=True)
+        r = SimExecutor(MN4, spec=spec).run(g)
         print(f"{policy:12s} {r.makespan*1e3:9.1f} {r.energy:8.2f} "
               f"{r.edp:10.4f} {r.resumes:8d}")
 

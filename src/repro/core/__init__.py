@@ -9,10 +9,13 @@ distributed elastic controller / serving autoscaler.
 
 from .cost import CostClause, TaskTypeInfo, TaskTypeRegistry
 from .energy import CoreState, EnergyMeter, PowerModel
+from .governor import (DEFAULT_MIN_SAMPLES, GovernorReport, GovernorSpec,
+                       PolicyEntry, ResourceGovernor, policy_entry,
+                       register_policy, registered_policies)
 from .manager import WorkerManager, WorkerState
 from .monitoring import EMA, AccuracyReport, TaskMonitor, TypeMetrics
 from .policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
-                       PollDecision, PredictionPolicy, make_policy)
+                       PollDecision, PredictionPolicy)
 from .prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
                          PredictionConfig)
 from .sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
@@ -21,10 +24,13 @@ from .sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
 __all__ = [
     "CostClause", "TaskTypeInfo", "TaskTypeRegistry",
     "CoreState", "EnergyMeter", "PowerModel",
+    "DEFAULT_MIN_SAMPLES", "GovernorReport", "GovernorSpec", "PolicyEntry",
+    "ResourceGovernor", "policy_entry", "register_policy",
+    "registered_policies",
     "WorkerManager", "WorkerState",
     "EMA", "AccuracyReport", "TaskMonitor", "TypeMetrics",
     "BusyPolicy", "HybridPolicy", "IdlePolicy", "Policy", "PollDecision",
-    "PredictionPolicy", "make_policy",
+    "PredictionPolicy",
     "DEFAULT_PREDICTION_RATE_S", "CPUPredictor", "PredictionConfig",
     "DLBHybridPolicy", "DLBPredictionPolicy", "LeWIPolicy",
     "ResourceBroker", "SharingPolicy",

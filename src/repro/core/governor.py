@@ -1,0 +1,409 @@
+"""The unified resource governor — one declarative spec + policy registry
+driving every monitoring→prediction→policy loop in the repo.
+
+The paper contributes a single control loop (Algorithms 1–2): a
+:class:`~repro.core.monitoring.TaskMonitor` aggregates per-type workload, a
+:class:`~repro.core.prediction.CPUPredictor` turns it into the optimal
+resource count Δ, and a :class:`~repro.core.policies.Policy` applies Δ to
+idle/resume (or lend/acquire) decisions.  Four frontends reuse that loop at
+different granularities — threads (``runtime.thread_executor``), simulated
+cores (``runtime.sim``), DP training replicas (``train.elastic``) and
+serving replicas (``serving.autoscale``) — and before this module each
+wired the stack by hand with diverging defaults.
+
+:class:`GovernorSpec` is the single declarative description of a stack
+(resource count, policy + params, prediction config, power model,
+monitoring toggle), :class:`ResourceGovernor` assembles and owns the
+``TaskMonitor → CPUPredictor → Policy → WorkerManager → EnergyMeter``
+pipeline behind one lifecycle surface, and the string→factory **policy
+registry** (:func:`register_policy`) lets new policies plug in without
+touching core or any frontend.
+
+Frontends come in two shapes, both served by the same governor:
+
+* **push/worker-loop** (executors): workers call ``on_task_started`` /
+  ``on_task_finished`` / ``on_poll_empty`` / ``on_tasks_added``, a ticker
+  calls ``tick()``; pass a ``clock`` so the worker-state half
+  (:class:`~repro.core.manager.WorkerManager` +
+  :class:`~repro.core.energy.EnergyMeter`) is built.
+* **pull/target** (autoscaler, elastic trainer): the frontend feeds monitor
+  events and periodically asks ``target(queued, active)`` for the desired
+  replica count; no clock needed, no worker state is built.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field, replace
+from typing import Any, Callable, Mapping
+
+from .energy import CoreState, EnergyMeter, PowerModel
+from .manager import WorkerManager
+from .monitoring import DEFAULT_MIN_SAMPLES, AccuracyReport, TaskMonitor
+from .policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
+                       PollDecision, PredictionPolicy)
+from .prediction import CPUPredictor, PredictionConfig
+from .sharing import DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy
+
+__all__ = [
+    "GovernorSpec",
+    "GovernorReport",
+    "ResourceGovernor",
+    "PolicyEntry",
+    "register_policy",
+    "registered_policies",
+    "policy_entry",
+    "DEFAULT_MIN_SAMPLES",
+]
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PolicyEntry:
+    """Registry record for one policy name."""
+
+    name: str
+    factory: Callable[["GovernorSpec", CPUPredictor | None], Policy]
+    #: the governor must build a CPUPredictor and pass it to the factory
+    needs_predictor: bool = False
+    #: DLB-style resource sharing: empty polls may LEND the CPU away and
+    #: the predictor runs with oversubscription allowed (paper §3.3)
+    sharing: bool = False
+
+
+_REGISTRY: dict[str, PolicyEntry] = {}
+
+
+def register_policy(name: str, *, needs_predictor: bool = False,
+                    sharing: bool = False):
+    """Decorator registering ``factory(spec, predictor) -> Policy``.
+
+    Downstream code adds policies without touching core::
+
+        @register_policy("my-policy", needs_predictor=True)
+        def _my_policy(spec, predictor):
+            return MyPolicy(predictor, **spec.policy_params)
+    """
+    def deco(factory):
+        _REGISTRY[name] = PolicyEntry(name=name, factory=factory,
+                                      needs_predictor=needs_predictor,
+                                      sharing=sharing)
+        return factory
+    return deco
+
+
+def registered_policies() -> list[str]:
+    """All registered policy names (sorted) — includes DLB policies."""
+    return sorted(_REGISTRY)
+
+
+def policy_entry(name: str) -> PolicyEntry:
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        raise ValueError(
+            f"unknown policy {name!r}; registered policies: "
+            + ", ".join(registered_policies()))
+    return entry
+
+
+# -- built-in policies (paper §2/§3.2 + §3.3) --------------------------------
+
+
+@register_policy("busy")
+def _busy(spec: "GovernorSpec", predictor: CPUPredictor | None) -> Policy:
+    return BusyPolicy()
+
+
+@register_policy("idle")
+def _idle(spec: "GovernorSpec", predictor: CPUPredictor | None) -> Policy:
+    return IdlePolicy()
+
+
+@register_policy("hybrid")
+def _hybrid(spec: "GovernorSpec", predictor: CPUPredictor | None) -> Policy:
+    return HybridPolicy(spin_budget=spec.spin_budget)
+
+
+@register_policy("prediction", needs_predictor=True)
+def _prediction(spec: "GovernorSpec",
+                predictor: CPUPredictor | None) -> Policy:
+    assert predictor is not None
+    return PredictionPolicy(predictor)
+
+
+@register_policy("dlb-lewi", sharing=True)
+def _dlb_lewi(spec: "GovernorSpec",
+              predictor: CPUPredictor | None) -> Policy:
+    return LeWIPolicy()
+
+
+@register_policy("dlb-hybrid", sharing=True)
+def _dlb_hybrid(spec: "GovernorSpec",
+                predictor: CPUPredictor | None) -> Policy:
+    return DLBHybridPolicy(spin_budget=spec.spin_budget)
+
+
+@register_policy("dlb-prediction", needs_predictor=True, sharing=True)
+def _dlb_prediction(spec: "GovernorSpec",
+                    predictor: CPUPredictor | None) -> Policy:
+    assert predictor is not None
+    return DLBPredictionPolicy(predictor)
+
+
+# ---------------------------------------------------------------------------
+# Declarative spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GovernorSpec:
+    """Declarative description of one governor stack.
+
+    The same spec drives every frontend: ``resources`` means worker
+    threads in the executor, cores in the simulator, and replicas in the
+    elastic trainer / serving autoscaler.
+    """
+
+    #: number of resources (threads / cores / replicas) owned — required,
+    #: so no frontend can silently run on a forgotten default (e.g. a
+    #: 1-core simulation of a 48-core machine)
+    resources: int
+    #: registered policy name (see :func:`registered_policies`)
+    policy: str = "busy"
+    #: Algorithm 1 configuration (rate f, min_samples, fallbacks).
+    #: ``prediction.min_samples`` is the single source of truth for the
+    #: sample-count threshold — :data:`DEFAULT_MIN_SAMPLES` (= 4)
+    #: everywhere, replacing the old 4-vs-3 split between executors and
+    #: the elastic/serving controllers.
+    prediction: PredictionConfig = field(default_factory=PredictionConfig)
+    #: consecutive empty polls before hybrid-style policies stop spinning
+    spin_budget: int = 100
+    #: force monitoring on/off; None ⇒ on iff the policy needs predictions
+    monitoring: bool | None = None
+    #: energy proxy model (None ⇒ default PowerModel)
+    power: PowerModel | None = None
+    #: floor for ``target()`` while load is present (autoscaler/elastic)
+    min_resources: int = 0
+    #: extra kwargs for custom registered policy factories
+    policy_params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.resources < 1:
+            raise ValueError("resources must be >= 1")
+        if self.spin_budget < 1:
+            raise ValueError("spin_budget must be >= 1")
+        if not 0 <= self.min_resources <= self.resources:
+            raise ValueError("min_resources must be in [0, resources]")
+
+    # -- serialization (configs / CLI round-trip) ---------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        d = asdict(self)
+        d["policy_params"] = dict(self.policy_params)
+        if self.power is None:
+            d.pop("power")
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "GovernorSpec":
+        d = dict(d)
+        if isinstance(d.get("prediction"), Mapping):
+            d["prediction"] = PredictionConfig(**d["prediction"])
+        if isinstance(d.get("power"), Mapping):
+            d["power"] = PowerModel(**d["power"])
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Unified report schema
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GovernorReport:
+    """One metrics schema for every frontend (replaces the divergent
+    ``ExecutorReport`` / ``SimReport``): benchmarks and launchers compare
+    policies through these fields regardless of which stack produced them.
+    Simulator-only fields (``state_seconds``, ``dlb_calls``,
+    ``monitor_events``) default to empty/zero elsewhere."""
+
+    policy: str
+    makespan: float
+    energy: float
+    edp: float
+    tasks_completed: int
+    resumes: int
+    idles: int
+    predictions: int
+    accuracy: AccuracyReport | None
+    name: str = ""
+    state_seconds: dict[str, float] = field(default_factory=dict)
+    dlb_calls: int = 0
+    monitor_events: int = 0
+
+
+# ---------------------------------------------------------------------------
+# The governor facade
+# ---------------------------------------------------------------------------
+
+
+class ResourceGovernor:
+    """Assembles and owns one monitoring→prediction→policy stack.
+
+    Parameters
+    ----------
+    spec:
+        The declarative description; the policy name is resolved through
+        the registry at construction time.
+    clock:
+        Time source (wall or virtual).  When given, the worker-state half
+        of the stack (:class:`WorkerManager` + :class:`EnergyMeter`) is
+        built; pull-style frontends (autoscaler, elastic) omit it.
+    monitor:
+        Use an externally-owned :class:`TaskMonitor` (e.g. the serving
+        engine feeds request events into a monitor shared with the
+        autoscaler's governor) instead of building one.
+    worker_ids:
+        Explicit resource ids (the simulator uses global cpu ids);
+        defaults to ``range(spec.resources)``.
+    t0:
+        Epoch for energy integration (virtual ``now`` in the simulator).
+    """
+
+    def __init__(self, spec: GovernorSpec, *,
+                 clock: Callable[[], float] | None = None,
+                 monitor: TaskMonitor | None = None,
+                 worker_ids: list[int] | None = None,
+                 t0: float = 0.0) -> None:
+        entry = policy_entry(spec.policy)
+        self.spec = spec
+        self.entry = entry
+        self.sharing = entry.sharing
+        needs_monitor = entry.needs_predictor or bool(spec.monitoring)
+        if monitor is not None:
+            self.monitor: TaskMonitor | None = monitor
+        elif needs_monitor:
+            self.monitor = TaskMonitor(
+                min_samples=spec.prediction.min_samples)
+        else:
+            self.monitor = None
+        self.predictor: CPUPredictor | None = None
+        if entry.needs_predictor:
+            assert self.monitor is not None
+            cfg = spec.prediction
+            if entry.sharing and not cfg.allow_oversubscription:
+                # paper §3.3: DLB-prediction runs Alg. 1 "slightly
+                # modified to allow a superior number of CPUs"
+                cfg = replace(cfg, allow_oversubscription=True)
+            self.predictor = CPUPredictor(self.monitor,
+                                          n_cpus=spec.resources, config=cfg)
+        self.policy: Policy = entry.factory(spec, self.predictor)
+        self.manager: WorkerManager | None = None
+        self.energy: EnergyMeter | None = None
+        if clock is not None:
+            ids = (list(worker_ids) if worker_ids is not None
+                   else list(range(spec.resources)))
+            self.energy = EnergyMeter(0, spec.power, t0=t0)
+            for w in ids:
+                self.energy.add_core(w, CoreState.SPIN, t0)
+            self.manager = WorkerManager(len(ids), self.policy, clock=clock,
+                                         energy=self.energy, worker_ids=ids)
+
+    # -- push-style lifecycle (executors: Alg. 2 hooks) ----------------------
+
+    def _require_manager(self) -> WorkerManager:
+        if self.manager is None:
+            raise RuntimeError(
+                "this governor was built without a clock; worker-loop "
+                "hooks need ResourceGovernor(spec, clock=...)")
+        return self.manager
+
+    def on_task_started(self, worker_id: int) -> None:
+        self._require_manager().task_started(worker_id)
+
+    def on_task_finished(self, worker_id: int) -> None:
+        self._require_manager().task_finished(worker_id)
+
+    def on_poll_empty(self, worker_id: int,
+                      spin_count_override: int | None = None) -> PollDecision:
+        return self._require_manager().poll_empty(
+            worker_id, spin_count_override=spin_count_override)
+
+    def on_tasks_added(self, ready_tasks: int) -> list[int]:
+        """Tasks became ready; returns worker ids to actually wake."""
+        return self._require_manager().notify_added(ready_tasks)
+
+    def reevaluate_spinners(self) -> list[int]:
+        return self._require_manager().reevaluate_spinners()
+
+    def tick(self) -> int:
+        """One prediction-rate tick; returns the fresh Δ (or the full
+        resource count for non-predictive policies)."""
+        self.policy.on_prediction_tick()
+        if self.predictor is not None:
+            return self.predictor.delta
+        return self.spec.resources
+
+    # -- pull-style surface (autoscaler / elastic) ---------------------------
+
+    def target(self, queued: int, active: int) -> int:
+        """Desired resource count for the current load, policy-decided.
+
+        Ticks the predictor (if any), asks the policy, then clamps to
+        ``[min_resources, resources]`` — the floor applies only while
+        load exists, so scale-to-zero policies can return 0.
+        """
+        self.policy.on_prediction_tick()
+        raw = self.policy.target(queued, active, self.spec.resources)
+        load = queued + active
+        if load <= 0 and raw <= 0:
+            return 0
+        floor = self.spec.min_resources if load > 0 else 0
+        return max(floor, min(raw, self.spec.resources))
+
+    def live_load(self) -> int:
+        """Live (ready + executing) instances known to the monitor."""
+        if self.monitor is None:
+            return 0
+        return self.monitor.live_instances()
+
+    # -- reporting -----------------------------------------------------------
+
+    def finish(self, now: float) -> None:
+        if self.energy is not None:
+            self.energy.finish(now)
+
+    def report(self, *, name: str = "", makespan: float | None = None,
+               tasks_fallback: int = 0, dlb_calls: int = 0,
+               monitor_events: int = 0) -> GovernorReport:
+        """Assemble the unified report (``finish()`` must have run)."""
+        energy_meter = self.energy
+        if energy_meter is None:
+            raise RuntimeError("report() needs the energy/manager half "
+                               "(build the governor with a clock)")
+        manager = self._require_manager()
+        if makespan is None:
+            makespan = energy_meter.elapsed()
+        energy = energy_meter.energy()
+        return GovernorReport(
+            policy=self.spec.policy,
+            makespan=makespan,
+            energy=energy,
+            edp=energy * makespan,
+            tasks_completed=(self.monitor.completed_instances()
+                            if self.monitor else tasks_fallback),
+            resumes=manager.resumes,
+            idles=manager.idles,
+            predictions=(self.predictor.predictions_made
+                         if self.predictor else 0),
+            accuracy=(self.monitor.accuracy_report()
+                      if self.monitor else None),
+            name=name,
+            state_seconds={s.value: v for s, v
+                           in energy_meter.state_seconds().items()},
+            dlb_calls=dlb_calls,
+            monitor_events=monitor_events,
+        )

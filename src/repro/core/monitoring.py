@@ -33,7 +33,16 @@ __all__ = [
     "TypeMetrics",
     "TaskMonitor",
     "AccuracyReport",
+    "DEFAULT_MIN_SAMPLES",
 ]
+
+#: The one repo-wide default for "how many completed samples before a
+#: type's unitary cost α_j is trusted" (Alg. 1's reliability threshold).
+#: Every stack assembled through :class:`~repro.core.governor.GovernorSpec`
+#: inherits it via ``PredictionConfig.min_samples`` — it replaces the old
+#: inconsistent defaults (4 in the executors, 3 in the elastic/serving
+#: controllers).
+DEFAULT_MIN_SAMPLES = 4
 
 
 class EMA:
@@ -124,7 +133,7 @@ class TaskMonitor:
     """The shared monitoring module (paper Fig. 2, left box)."""
 
     def __init__(self, decay: float = 0.25, warmup: int = 8,
-                 min_samples: int = 4) -> None:
+                 min_samples: int = DEFAULT_MIN_SAMPLES) -> None:
         self._lock = threading.Lock()
         self._types: dict[str, TypeMetrics] = {}
         self._decay = decay
@@ -270,3 +279,9 @@ class TaskMonitor:
     def completed_instances(self) -> int:
         with self._lock:
             return sum(m.completed for m in self._types.values())
+
+    def live_instances(self) -> int:
+        """Total live (ready + executing) instances across all types —
+        the load signal pull-style frontends hand to ``target()``."""
+        with self._lock:
+            return sum(m.live_instances for m in self._types.values())

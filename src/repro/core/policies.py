@@ -34,7 +34,6 @@ __all__ = [
     "IdlePolicy",
     "HybridPolicy",
     "PredictionPolicy",
-    "make_policy",
 ]
 
 
@@ -77,6 +76,13 @@ class Policy(ABC):
     def on_prediction_tick(self) -> None:  # pragma: no cover - default no-op
         """Called by the executor at the prediction rate (if enabled)."""
 
+    def target(self, queued: int, active: int, n_resources: int) -> int:
+        """Desired resource count for pull-style frontends (the serving
+        autoscaler / elastic trainer ask this instead of running a worker
+        loop).  Default: purely reactive — one resource per unit of load,
+        capped at what we own (the idle policy's behaviour)."""
+        return min(queued + active, n_resources)
+
 
 class BusyPolicy(Policy):
     name = "busy"
@@ -90,6 +96,9 @@ class BusyPolicy(Policy):
         # Nothing ever sleeps under busy, but if the executor started some
         # workers idle, wake everything.
         return idle
+
+    def target(self, queued: int, active: int, n_resources: int) -> int:
+        return n_resources  # everything stays hot, load or not
 
 
 class IdlePolicy(Policy):
@@ -169,19 +178,7 @@ class PredictionPolicy(Policy):
     def on_prediction_tick(self) -> None:
         self.predictor.tick()
 
-
-def make_policy(name: str, predictor: CPUPredictor | None = None,
-                spin_budget: int = 100) -> Policy:
-    """Factory used by configs / CLI (``--policy``)."""
-    if name == "busy":
-        return BusyPolicy()
-    if name == "idle":
-        return IdlePolicy()
-    if name == "hybrid":
-        return HybridPolicy(spin_budget=spin_budget)
-    if name == "prediction":
-        if predictor is None:
-            raise ValueError("prediction policy needs a CPUPredictor")
-        return PredictionPolicy(predictor)
-    raise ValueError(f"unknown policy {name!r} "
-                     "(expected busy|idle|hybrid|prediction)")
+    def target(self, queued: int, active: int, n_resources: int) -> int:
+        if queued + active <= 0:
+            return 0  # no live work ⇒ scale to zero
+        return self.predictor.delta

@@ -23,7 +23,7 @@ import math
 import threading
 from dataclasses import dataclass
 
-from .monitoring import TaskMonitor
+from .monitoring import DEFAULT_MIN_SAMPLES, TaskMonitor
 
 __all__ = ["PredictionConfig", "CPUPredictor"]
 
@@ -36,7 +36,8 @@ DEFAULT_PREDICTION_RATE_S = 50e-6
 class PredictionConfig:
     rate_s: float = DEFAULT_PREDICTION_RATE_S
     #: below this many completed samples a type's α_j is not trusted
-    min_samples: int = 4
+    #: (one repo-wide default — see monitoring.DEFAULT_MIN_SAMPLES)
+    min_samples: int = DEFAULT_MIN_SAMPLES
     #: force the count-based fallback for *all* types (coarse-grained mode)
     count_based_only: bool = False
     #: allow Δ above the locally-owned CPUs (used by the DLB-prediction
@@ -47,6 +48,15 @@ class PredictionConfig:
     #: (a DLB deployment cannot hold more than the machine's cores; we
     #: default to the two-NUMA-node arrangement of the paper's Table 3)
     oversubscription_cap: float = 2.0
+
+    def __post_init__(self) -> None:
+        if self.rate_s <= 0:
+            raise ValueError(f"rate_s must be > 0, got {self.rate_s}")
+        if self.min_samples < 1:
+            raise ValueError(
+                f"min_samples must be >= 1, got {self.min_samples}")
+        if self.oversubscription_cap < 1.0:
+            raise ValueError("oversubscription_cap must be >= 1.0")
 
 
 class CPUPredictor:

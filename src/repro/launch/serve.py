@@ -13,19 +13,23 @@ import jax
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
+from ..core import policy_entry, registered_policies
 from ..models import init_params
 from ..serving import AutoScaler, Request, ServingEngine
 
 
 def main() -> None:
+    # Any registered non-sharing policy can drive the autoscaler —
+    # new policies show up here without touching this launcher.
+    policies = [p for p in registered_policies()
+                if not policy_entry(p).sharing]
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--policy", default="prediction",
-                    choices=["busy", "idle", "prediction"])
+    ap.add_argument("--policy", default="prediction", choices=policies)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

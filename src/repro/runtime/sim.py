@@ -30,23 +30,24 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from typing import Any
 
-from ..core.energy import CoreState, EnergyMeter, PowerModel
-from ..core.manager import WorkerManager, WorkerState
-from ..core.monitoring import AccuracyReport, TaskMonitor
-from ..core.policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
-                             PollDecision, PredictionPolicy)
-from ..core.prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
-                               PredictionConfig)
-from ..core.sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
-                            ResourceBroker, SharingPolicy)
+from ..core.energy import CoreState, PowerModel
+from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
+                             GovernorSpec, ResourceGovernor)
+from ..core.manager import WorkerState
+from ..core.policies import PollDecision
+from ..core.prediction import DEFAULT_PREDICTION_RATE_S, PredictionConfig
+from ..core.sharing import ResourceBroker, SharingPolicy
 from .machine import MachineModel
 from .scheduler import Scheduler
 from .task import Task, TaskGraph
 
 __all__ = ["SimJobSpec", "SimReport", "SimCluster", "SimExecutor"]
+
+#: kept as an alias so downstream code reads one schema everywhere
+SimReport = GovernorReport
 
 # Event kinds (sorted lexically only via seq tiebreak; kind order irrelevant)
 _FINISH, _TICK, _RESUME, _SPIN_EXPIRE = range(4)
@@ -54,35 +55,40 @@ _FINISH, _TICK, _RESUME, _SPIN_EXPIRE = range(4)
 
 @dataclass
 class SimJobSpec:
-    """Declarative description of one job in the cluster."""
+    """Declarative description of one job in the cluster.
+
+    The resource stack is described by ``governor`` (a
+    :class:`~repro.core.governor.GovernorSpec`); the flat kwargs below it
+    remain as conveniences and are folded into a spec when ``governor``
+    is not given.
+    """
 
     name: str
     graph: TaskGraph
-    policy: str = "busy"            # busy|idle|hybrid|prediction|
-    #                                 dlb-lewi|dlb-hybrid|dlb-prediction
+    policy: str = "busy"            # any registered policy name
     cpus: list[int] | None = None   # global cpu ids owned by the job
     monitoring: bool | None = None  # default: on iff policy needs it
     prediction_rate_s: float = DEFAULT_PREDICTION_RATE_S
     spin_budget: int = 100
-    min_samples: int = 4
+    min_samples: int = DEFAULT_MIN_SAMPLES
     power: PowerModel | None = None
+    governor: GovernorSpec | None = None  # overrides the kwargs above
 
-
-@dataclass(frozen=True)
-class SimReport:
-    name: str
-    policy: str
-    makespan: float
-    energy: float
-    edp: float
-    state_seconds: dict[str, float]
-    tasks_completed: int
-    resumes: int
-    idles: int
-    dlb_calls: int
-    predictions: int
-    accuracy: AccuracyReport | None
-    monitor_events: int
+    def governor_spec(self, n_cpus: int) -> GovernorSpec:
+        if self.governor is not None:
+            if self.governor.resources != n_cpus:
+                # The cluster allocation wins; clamp min_resources (unused
+                # by the simulator) so the resize cannot fail validation.
+                return replace(
+                    self.governor, resources=n_cpus,
+                    min_resources=min(self.governor.min_resources, n_cpus))
+            return self.governor
+        return GovernorSpec(
+            resources=n_cpus, policy=self.policy,
+            prediction=PredictionConfig(rate_s=self.prediction_rate_s,
+                                        min_samples=self.min_samples),
+            spin_budget=self.spin_budget, monitoring=self.monitoring,
+            power=self.power)
 
 
 class _SimJob:
@@ -93,53 +99,22 @@ class _SimJob:
         self.name = spec.name
         self.graph = spec.graph
         self.cpus = cpus
-        needs_monitor = spec.policy in (
-            "prediction", "dlb-prediction") or bool(spec.monitoring)
-        self.monitor = TaskMonitor(min_samples=spec.min_samples) \
-            if needs_monitor else None
+        self.governor = ResourceGovernor(
+            spec.governor_spec(len(cpus)), clock=lambda: cluster.now,
+            worker_ids=list(cpus), t0=cluster.now)
+        self.monitor = self.governor.monitor
         self.scheduler = Scheduler(self.monitor)
-        self.predictor: CPUPredictor | None = None
-        sharing = spec.policy.startswith("dlb-")
-        if spec.policy in ("prediction", "dlb-prediction"):
-            assert self.monitor is not None
-            self.predictor = CPUPredictor(
-                self.monitor, n_cpus=len(cpus),
-                config=PredictionConfig(
-                    rate_s=spec.prediction_rate_s,
-                    min_samples=spec.min_samples,
-                    allow_oversubscription=sharing))
-        self.policy = self._make_policy(spec)
-        self.energy = EnergyMeter(0, spec.power, t0=cluster.now)
-        for c in cpus:
-            self.energy.add_core(c, CoreState.SPIN, cluster.now)
-        self.manager = WorkerManager(
-            len(cpus), self.policy, clock=lambda: cluster.now,
-            energy=self.energy, worker_ids=list(cpus))
-        self.sharing = sharing
+        self.predictor = self.governor.predictor
+        self.policy = self.governor.policy
+        self.energy = self.governor.energy
+        self.manager = self.governor.manager
+        self.sharing = self.governor.sharing
+        self.rate_s = self.governor.spec.prediction.rate_s
         self.epoch: dict[int, int] = {c: 0 for c in cpus}
         self.waking: set[int] = set()
         self.borrowed: set[int] = set()
         self.t_done: float | None = None
         self.monitor_events = 0
-
-    def _make_policy(self, spec: SimJobSpec) -> Policy:
-        if spec.policy == "busy":
-            return BusyPolicy()
-        if spec.policy == "idle":
-            return IdlePolicy()
-        if spec.policy == "hybrid":
-            return HybridPolicy(spin_budget=spec.spin_budget)
-        if spec.policy == "prediction":
-            assert self.predictor is not None
-            return PredictionPolicy(self.predictor)
-        if spec.policy == "dlb-lewi":
-            return LeWIPolicy()
-        if spec.policy == "dlb-hybrid":
-            return DLBHybridPolicy(spin_budget=spec.spin_budget)
-        if spec.policy == "dlb-prediction":
-            assert self.predictor is not None
-            return DLBPredictionPolicy(self.predictor)
-        raise ValueError(f"unknown policy {spec.policy!r}")
 
     @property
     def done(self) -> bool:
@@ -190,8 +165,7 @@ class SimCluster:
             for w in job.spinning_workers():
                 self._poll(job, w)
             if job.policy.uses_predictions:
-                self._push(self.now + job.spec.prediction_rate_s, _TICK,
-                           job.name)
+                self._push(self.now + job.rate_s, _TICK, job.name)
         events = 0
         while self._heap:
             events += 1
@@ -221,24 +195,11 @@ class SimCluster:
         return reports
 
     def _report(self, job: _SimJob) -> SimReport:
-        acc = job.monitor.accuracy_report() if job.monitor else None
-        return SimReport(
+        return job.governor.report(
             name=job.name,
-            policy=job.spec.policy,
-            makespan=job.energy.elapsed(),
-            energy=job.energy.energy(),
-            edp=job.energy.edp(),
-            state_seconds={s.value: v
-                           for s, v in job.energy.state_seconds().items()},
-            tasks_completed=(job.monitor.completed_instances()
-                             if job.monitor else len(job.graph.tasks)),
-            resumes=job.manager.resumes,
-            idles=job.manager.idles,
+            tasks_fallback=len(job.graph.tasks),
             dlb_calls=(self.broker.job_calls(job.name)
                        if self.broker else 0),
-            predictions=(job.predictor.predictions_made
-                         if job.predictor else 0),
-            accuracy=acc,
             monitor_events=job.monitor_events,
         )
 
@@ -284,7 +245,7 @@ class SimCluster:
         job = self.jobs[job_name]
         if job.done:
             return  # stop rescheduling; lets the loop terminate
-        job.policy.on_prediction_tick()
+        job.governor.tick()
         # Trim: re-evaluate spinning workers against the fresh Δ.
         for w in job.spinning_workers():
             if job.scheduler.ready_count > 0:
@@ -306,7 +267,7 @@ class SimCluster:
             if target > 0 and (self.broker.pool_size() > 0
                                or self.broker.lent_out(job.name) > 0):
                 self._acquire(job, target, eager=False)
-        self._push(self.now + job.spec.prediction_rate_s, _TICK, job.name)
+        self._push(self.now + job.rate_s, _TICK, job.name)
 
     def _on_resume(self, job_name: str, cpu: int) -> None:
         job = self.jobs[job_name]
@@ -448,15 +409,23 @@ class SimExecutor:
     def __init__(self, machine: MachineModel, policy: str = "busy",
                  n_cpus: int | None = None, monitoring: bool | None = None,
                  prediction_rate_s: float = DEFAULT_PREDICTION_RATE_S,
-                 spin_budget: int = 100, min_samples: int = 4,
-                 power: PowerModel | None = None) -> None:
+                 spin_budget: int = 100,
+                 min_samples: int = DEFAULT_MIN_SAMPLES,
+                 power: PowerModel | None = None,
+                 spec: GovernorSpec | None = None) -> None:
         self.machine = machine
-        self.spec = SimJobSpec(
-            name="job0", graph=TaskGraph(), policy=policy,
-            cpus=list(range(n_cpus if n_cpus is not None
-                            else machine.n_cores)),
-            monitoring=monitoring, prediction_rate_s=prediction_rate_s,
-            spin_budget=spin_budget, min_samples=min_samples, power=power)
+        if spec is not None:
+            self.spec = SimJobSpec(name="job0", graph=TaskGraph(),
+                                   cpus=list(range(spec.resources)),
+                                   governor=spec)
+        else:
+            self.spec = SimJobSpec(
+                name="job0", graph=TaskGraph(), policy=policy,
+                cpus=list(range(n_cpus if n_cpus is not None
+                                else machine.n_cores)),
+                monitoring=monitoring, prediction_rate_s=prediction_rate_s,
+                spin_budget=spin_budget, min_samples=min_samples,
+                power=power)
 
     def run(self, graph: TaskGraph) -> SimReport:
         self.spec.graph = graph

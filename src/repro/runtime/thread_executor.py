@@ -1,74 +1,77 @@
 """Real threaded executor.
 
 Runs task graphs with actual Python threads — the correctness twin of the
-simulator (same Scheduler / WorkerManager / Policy / TaskMonitor objects).
-Python's GIL means no true parallel speedup on this host; the executor
-exists to validate the concurrency logic (locking, idle/resume protocol,
-monitor event ordering) under real preemption, and to measure the *real*
-bookkeeping overhead of the monitoring infrastructure
-(``benchmarks/bench_overhead.py``).
+simulator (same governor-assembled Scheduler / WorkerManager / Policy /
+TaskMonitor objects).  Python's GIL means no true parallel speedup on this
+host; the executor exists to validate the concurrency logic (locking,
+idle/resume protocol, monitor event ordering) under real preemption, and
+to measure the *real* bookkeeping overhead of the monitoring
+infrastructure (``benchmarks/bench_overhead.py``).
+
+The whole resource stack is declared by a
+:class:`~repro.core.governor.GovernorSpec` and assembled by
+:class:`~repro.core.governor.ResourceGovernor`; the executor only owns the
+threads, the condition variable and the scheduler.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
 
-from ..core.energy import CoreState, EnergyMeter, PowerModel
-from ..core.manager import WorkerManager, WorkerState
-from ..core.monitoring import AccuracyReport, TaskMonitor
-from ..core.policies import Policy, PollDecision, make_policy
-from ..core.prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
-                               PredictionConfig)
+from ..core.energy import PowerModel
+from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
+                             GovernorSpec, ResourceGovernor)
+from ..core.manager import WorkerState
+from ..core.policies import PollDecision
+from ..core.prediction import PredictionConfig
 from .scheduler import Scheduler
 from .task import TaskGraph
 
 __all__ = ["ThreadExecutor", "ExecutorReport"]
 
-
-@dataclass(frozen=True)
-class ExecutorReport:
-    policy: str
-    makespan: float
-    energy: float
-    edp: float
-    tasks_completed: int
-    resumes: int
-    idles: int
-    predictions: int
-    accuracy: AccuracyReport | None
+#: kept as an alias so downstream code reads one schema everywhere
+ExecutorReport = GovernorReport
 
 
 class ThreadExecutor:
-    def __init__(self, n_workers: int, policy: str = "busy",
+    def __init__(self, n_workers: int | None = None, policy: str = "busy",
+                 spec: GovernorSpec | None = None,
                  monitoring: bool | None = None,
                  prediction_rate_s: float = 1e-3,
                  spin_budget: int = 100,
-                 min_samples: int = 4,
+                 min_samples: int = DEFAULT_MIN_SAMPLES,
                  power: PowerModel | None = None) -> None:
-        if n_workers < 1:
-            raise ValueError("need at least one worker")
-        self.n_workers = n_workers
-        self.policy_name = policy
-        needs_monitor = policy == "prediction" or bool(monitoring)
-        self.monitor = TaskMonitor(min_samples=min_samples) \
-            if needs_monitor else None
-        self.scheduler = Scheduler(self.monitor)
-        self.predictor: CPUPredictor | None = None
-        if policy == "prediction":
-            assert self.monitor is not None
-            self.predictor = CPUPredictor(
-                self.monitor, n_cpus=n_workers,
-                config=PredictionConfig(rate_s=prediction_rate_s,
-                                        min_samples=min_samples))
-        self.policy: Policy = make_policy(policy, self.predictor,
-                                          spin_budget)
-        self.prediction_rate_s = prediction_rate_s
+        if spec is None:
+            if n_workers is None:
+                raise ValueError("need n_workers (or a GovernorSpec)")
+            if n_workers < 1:
+                raise ValueError("need at least one worker")
+            spec = GovernorSpec(
+                resources=n_workers, policy=policy,
+                prediction=PredictionConfig(rate_s=prediction_rate_s,
+                                            min_samples=min_samples),
+                spin_budget=spin_budget, monitoring=monitoring, power=power)
+        self.spec = spec
+        self.n_workers = spec.resources
+        self.policy_name = spec.policy
         self._t0 = time.perf_counter()
-        self.energy = EnergyMeter(n_workers, power, t0=0.0)
-        self.manager = WorkerManager(
-            n_workers, self.policy, clock=self._clock, energy=self.energy)
+        self.governor = ResourceGovernor(spec, clock=self._clock)
+        if self.governor.sharing:
+            raise ValueError(
+                "LEND policies need a broker-aware executor (use the "
+                "simulator for DLB experiments)")
+        self.monitor = self.governor.monitor
+        self.predictor = self.governor.predictor
+        self.policy = self.governor.policy
+        self.energy = self.governor.energy
+        self.manager = self.governor.manager
+        self.scheduler = Scheduler(self.monitor)
+        # Alg. 1 uses spec.prediction.rate_s for its workload math, but a
+        # real-time ticker thread cannot honor microsecond rates (the
+        # simulator's 50 µs default would busy-loop a core); floor the
+        # wall-clock tick interval at 1 ms.
+        self.prediction_rate_s = max(spec.prediction.rate_s, 1e-3)
         self._cv = threading.Condition()
         self._shutdown = False
 
@@ -81,14 +84,14 @@ class ThreadExecutor:
         while True:
             task = self.scheduler.poll()
             if task is not None:
-                self.manager.task_started(wid)
+                self.governor.on_task_started(wid)
                 t0 = time.perf_counter()
                 if task.fn is not None:
                     task.fn()
                 elif task.service_time is not None:
                     time.sleep(task.service_time)
                 elapsed = time.perf_counter() - t0
-                self.manager.task_finished(wid)
+                self.governor.on_task_finished(wid)
                 newly = self.scheduler.complete(task, elapsed)
                 if newly:
                     self._on_work_added()
@@ -97,7 +100,7 @@ class ThreadExecutor:
                 continue
             if self._shutdown:
                 return
-            decision = self.manager.poll_empty(wid)
+            decision = self.governor.on_poll_empty(wid)
             if decision is PollDecision.SPIN:
                 time.sleep(0)  # yield the GIL
                 continue
@@ -112,7 +115,7 @@ class ThreadExecutor:
                 "simulator for DLB experiments)")
 
     def _on_work_added(self) -> None:
-        woken = self.manager.notify_added(self.scheduler.ready_count)
+        woken = self.governor.on_tasks_added(self.scheduler.ready_count)
         if woken:
             with self._cv:
                 self._cv.notify_all()
@@ -127,16 +130,16 @@ class ThreadExecutor:
             time.sleep(self.prediction_rate_s)
             if self._shutdown:
                 return
-            self.policy.on_prediction_tick()
+            self.governor.tick()
             if self.policy.uses_predictions:
-                self.manager.reevaluate_spinners()
+                self.governor.reevaluate_spinners()
             # Anti-starvation: if ready work exists, apply the resume path.
             if self.scheduler.ready_count > 0:
                 self._on_work_added()
 
     # -- public API -----------------------------------------------------------------
 
-    def run(self, graph: TaskGraph) -> ExecutorReport:
+    def run(self, graph: TaskGraph) -> GovernorReport:
         self.scheduler.submit_all(graph.tasks)
         threads = [threading.Thread(target=self._worker, args=(w,),
                                     name=f"worker-{w}", daemon=True)
@@ -151,18 +154,6 @@ class ThreadExecutor:
             t.join()
         ticker.join()
         makespan = time.perf_counter() - start
-        self.energy.finish(self._clock())
-        acc = self.monitor.accuracy_report() if self.monitor else None
-        return ExecutorReport(
-            policy=self.policy_name,
-            makespan=makespan,
-            energy=self.energy.energy(),
-            edp=self.energy.energy() * makespan,
-            tasks_completed=(self.monitor.completed_instances()
-                             if self.monitor else len(graph.tasks)),
-            resumes=self.manager.resumes,
-            idles=self.manager.idles,
-            predictions=(self.predictor.predictions_made
-                         if self.predictor else 0),
-            accuracy=acc,
-        )
+        self.governor.finish(self._clock())
+        return self.governor.report(makespan=makespan,
+                                    tasks_fallback=len(graph.tasks))

@@ -3,13 +3,18 @@
 A serving deployment holds up to ``max_replicas`` engine replicas.  The
 monitoring infrastructure aggregates request workloads (cost = prompt +
 expected new tokens, normalized by measured service times into unitary
-costs α), and the :class:`~repro.core.prediction.CPUPredictor` computes
-the optimal replica count Δ at the prediction rate — the serving twin of
-the paper's CPU manager:
+costs α) and a :class:`~repro.core.governor.ResourceGovernor` — built from
+the same :class:`~repro.core.governor.GovernorSpec` that drives the
+executors — computes the optimal replica count Δ at the prediction rate,
+the serving twin of the paper's CPU manager:
 
 * **busy**   — all replicas always hot (max throughput, max energy)
 * **idle**   — replicas park the moment they have no work
 * **prediction** — replicas track Δ
+
+The target decision is made by the registered :class:`Policy` object
+(``Policy.target``), not by branching on policy names, so any registered
+policy works here unchanged.
 
 Replica lifecycle costs (model load / cache warmup) play the role of the
 paper's thread resume latency; the EDP trade-off reproduces Fig. 4's
@@ -20,8 +25,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from ..core.governor import GovernorSpec, ResourceGovernor
 from ..core.monitoring import TaskMonitor
-from ..core.prediction import CPUPredictor, PredictionConfig
+from ..core.prediction import PredictionConfig
 
 __all__ = ["AutoScaler"]
 
@@ -30,23 +36,27 @@ __all__ = ["AutoScaler"]
 class AutoScaler:
     monitor: TaskMonitor
     max_replicas: int
-    policy: str = "prediction"          # busy | idle | prediction
+    policy: str = "prediction"          # any registered policy name
     min_replicas: int = 1
     rate_s: float = 0.05
+    spec: GovernorSpec | None = None    # overrides the kwargs above
 
     def __post_init__(self) -> None:
-        self.predictor = CPUPredictor(
-            self.monitor, n_cpus=self.max_replicas,
-            config=PredictionConfig(rate_s=self.rate_s, min_samples=3))
+        if self.spec is None:
+            self.spec = GovernorSpec(
+                resources=self.max_replicas, policy=self.policy,
+                min_resources=self.min_replicas,
+                prediction=PredictionConfig(rate_s=self.rate_s),
+                monitoring=True)
+        else:
+            # an explicit spec wins: keep the public fields in sync
+            self.max_replicas = self.spec.resources
+            self.min_replicas = self.spec.min_resources
+            self.policy = self.spec.policy
+            self.rate_s = self.spec.prediction.rate_s
+        self.governor = ResourceGovernor(self.spec, monitor=self.monitor)
+        self.predictor = self.governor.predictor
 
     def target(self, queued: int, active: int) -> int:
         """Replicas to keep hot, given current queue/active request counts."""
-        if self.policy == "busy":
-            return self.max_replicas
-        if self.policy == "idle":
-            return max(self.min_replicas if queued + active else 0,
-                       min(queued + active, self.max_replicas))
-        delta = self.predictor.tick()
-        if queued + active == 0:
-            return 0
-        return max(self.min_replicas, min(delta, self.max_replicas))
+        return self.governor.target(queued, active)

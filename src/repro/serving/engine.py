@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.governor import GovernorSpec, ResourceGovernor
 from ..core.monitoring import TaskMonitor
 from ..models import ModelConfig, decode_step, init_cache, prefill
 
@@ -73,12 +74,30 @@ def _scatter_cache(dst: dict, src: dict, slot: int) -> dict:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, monitor: TaskMonitor | None = None,
-                 ) -> None:
+                 governor: ResourceGovernor | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.monitor = monitor or TaskMonitor()
+        # The engine is the workload side of the paper's loop: it only
+        # feeds monitor events.  The monitor is owned by a governor —
+        # either one passed in (shared with an AutoScaler), or a minimal
+        # monitoring-only stack assembled here.
+        if governor is None:
+            governor = ResourceGovernor(
+                GovernorSpec(resources=max_batch, monitoring=True),
+                monitor=monitor)
+        elif monitor is not None and governor.monitor is not monitor:
+            raise ValueError(
+                "conflicting monitor and governor arguments: the engine "
+                "feeds events to governor.monitor, so pass one or the "
+                "other (or a governor built over that monitor)")
+        self.governor = governor
+        if governor.monitor is None:
+            raise ValueError(
+                "ServingEngine needs a monitoring governor — build it "
+                "from a GovernorSpec with monitoring=True")
+        self.monitor = governor.monitor
         self.queue: list[Request] = []
         self.active: list[Request | None] = [None] * max_batch
         self.cache = init_cache(cfg, max_batch, max_len)

@@ -17,8 +17,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from ..core.monitoring import TaskMonitor
-from ..core.prediction import CPUPredictor, PredictionConfig
+from ..core.governor import GovernorSpec, ResourceGovernor
+from ..core.prediction import PredictionConfig
 
 __all__ = ["ElasticController", "ReplicaSet"]
 
@@ -41,15 +41,22 @@ class ReplicaSet:
 class ElasticController:
     def __init__(self, max_replicas: int, global_batch: int,
                  policy: str = "prediction", rate_s: float = 1.0,
-                 min_replicas: int = 1) -> None:
-        self.max_replicas = max_replicas
-        self.min_replicas = min_replicas
-        self.policy = policy
-        self.monitor = TaskMonitor(min_samples=3)
-        self.predictor = CPUPredictor(
-            self.monitor, n_cpus=max_replicas,
-            config=PredictionConfig(rate_s=rate_s, min_samples=3))
-        self.set = ReplicaSet(list(range(max_replicas)), global_batch)
+                 min_replicas: int = 1,
+                 spec: GovernorSpec | None = None) -> None:
+        if spec is None:
+            spec = GovernorSpec(
+                resources=max_replicas, policy=policy,
+                min_resources=min_replicas,
+                prediction=PredictionConfig(rate_s=rate_s),
+                monitoring=True)
+        self.spec = spec
+        self.max_replicas = spec.resources
+        self.min_replicas = max(spec.min_resources, 1)
+        self.policy = spec.policy
+        self.governor = ResourceGovernor(spec)
+        self.monitor = self.governor.monitor
+        self.predictor = self.governor.predictor
+        self.set = ReplicaSet(list(range(self.max_replicas)), global_batch)
         self.failed: set[int] = set()
         self._task_seq = 0
         self.resizes: list[tuple[int, int]] = []   # (step, new_count)
@@ -82,11 +89,13 @@ class ElasticController:
         return self.set
 
     def resize_to_prediction(self, step: int) -> ReplicaSet:
-        """Apply Δ (prediction policy) or keep everything (busy)."""
-        if self.policy == "busy":
-            want = self.max_replicas
-        else:
-            want = self.predictor.tick()
+        """Ask the governor for the policy's replica target and apply it.
+
+        The backlog of live global batches is the load signal; the
+        governor ticks the predictor and lets the policy object decide
+        (busy keeps everything, prediction tracks Δ) — no policy-name
+        branching here."""
+        want = self.governor.target(self.governor.live_load(), 0)
         want = max(self.min_replicas,
                    min(want, self.max_replicas - len(self.failed)))
         cur = self.set.replicas

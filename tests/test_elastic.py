@@ -1,6 +1,6 @@
 """Elastic controller + straggler mitigation."""
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.train.elastic import ElasticController, ReplicaSet
 from repro.train.straggler import StragglerMonitor

@@ -1,0 +1,187 @@
+"""Unified ResourceGovernor API: spec round-trip, policy registry, and
+cross-frontend parity (ThreadExecutor vs SimExecutor stacks built from
+one GovernorSpec make identical decisions on a fixed task trace)."""
+
+import pytest
+
+from repro.core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
+                                 GovernorSpec, ResourceGovernor,
+                                 _REGISTRY, policy_entry, register_policy,
+                                 registered_policies)
+from repro.core.policies import BusyPolicy, PollDecision
+from repro.core.prediction import PredictionConfig
+from repro.runtime import (MN4, SimCluster, SimExecutor, SimJobSpec, Task,
+                           TaskGraph, ThreadExecutor)
+
+
+class TestSpec:
+    def test_round_trip(self):
+        spec = GovernorSpec(
+            resources=12, policy="prediction",
+            prediction=PredictionConfig(rate_s=1e-3, min_samples=2,
+                                        allow_oversubscription=True),
+            spin_budget=7, monitoring=True, min_resources=2,
+            policy_params={"foo": 1})
+        assert GovernorSpec.from_dict(spec.to_dict()) == spec
+
+    def test_defaults_are_unified(self):
+        spec = GovernorSpec(resources=4, policy="prediction")
+        assert spec.prediction.min_samples == DEFAULT_MIN_SAMPLES
+        gov = ResourceGovernor(spec)
+        # the monitor inherits the same threshold — no 4-vs-3 split
+        assert gov.monitor.min_samples == DEFAULT_MIN_SAMPLES
+        assert gov.predictor.config.min_samples == DEFAULT_MIN_SAMPLES
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            GovernorSpec(resources=0)
+        with pytest.raises(ValueError):
+            GovernorSpec(resources=4, spin_budget=0)
+        with pytest.raises(ValueError):
+            GovernorSpec(resources=4, min_resources=5)
+        with pytest.raises(ValueError):
+            PredictionConfig(min_samples=0)
+        with pytest.raises(ValueError):
+            PredictionConfig(rate_s=0.0)
+        with pytest.raises(ValueError):
+            PredictionConfig(rate_s=-1e-3)
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        names = registered_policies()
+        for expected in ("busy", "idle", "hybrid", "prediction",
+                         "dlb-lewi", "dlb-hybrid", "dlb-prediction"):
+            assert expected in names
+
+    def test_unknown_policy_lists_all_names(self):
+        with pytest.raises(ValueError) as exc:
+            policy_entry("no-such-policy")
+        msg = str(exc.value)
+        # the error must enumerate every registered name — including the
+        # DLB/sharing policies the old make_policy dispatch omitted
+        for name in registered_policies():
+            assert name in msg
+
+    def test_register_custom_policy(self):
+        @register_policy("test-custom")
+        def _custom(spec, predictor):
+            return BusyPolicy()
+
+        try:
+            assert "test-custom" in registered_policies()
+            gov = ResourceGovernor(GovernorSpec(resources=2,
+                                                policy="test-custom"))
+            assert isinstance(gov.policy, BusyPolicy)
+        finally:
+            _REGISTRY.pop("test-custom", None)
+
+    def test_custom_policy_reads_params(self):
+        @register_policy("test-param")
+        def _param(spec, predictor):
+            p = BusyPolicy()
+            p.knob = spec.policy_params["knob"]
+            return p
+
+        try:
+            gov = ResourceGovernor(GovernorSpec(
+                resources=2, policy="test-param",
+                policy_params={"knob": 42}))
+            assert gov.policy.knob == 42
+        finally:
+            _REGISTRY.pop("test-param", None)
+
+
+class TestGovernor:
+    def test_sharing_predictor_oversubscribes(self):
+        gov = ResourceGovernor(GovernorSpec(resources=8,
+                                            policy="dlb-prediction"))
+        assert gov.sharing
+        assert gov.predictor.config.allow_oversubscription
+
+    def test_pull_frontend_has_no_worker_state(self):
+        gov = ResourceGovernor(GovernorSpec(resources=4,
+                                            policy="prediction"))
+        assert gov.manager is None and gov.energy is None
+        with pytest.raises(RuntimeError):
+            gov.on_poll_empty(0)
+
+    def test_target_semantics(self):
+        busy = ResourceGovernor(GovernorSpec(resources=4, policy="busy",
+                                             min_resources=1))
+        idle = ResourceGovernor(GovernorSpec(resources=4, policy="idle",
+                                             min_resources=1))
+        pred = ResourceGovernor(GovernorSpec(resources=4,
+                                             policy="prediction",
+                                             min_resources=1))
+        assert busy.target(0, 0) == 4       # always hot
+        assert idle.target(0, 0) == 0       # scale to zero
+        assert idle.target(2, 1) == 3       # reactive
+        assert pred.target(0, 0) == 0       # no live work ⇒ zero
+        assert 1 <= pred.target(5, 0) <= 4  # Δ clamped to bounds
+
+
+class TestParity:
+    """ThreadExecutor and SimExecutor assembled from the SAME GovernorSpec
+    must make identical policy decisions on a fixed trace — the redesign's
+    core guarantee that the simulator is a faithful twin."""
+
+    SPEC = GovernorSpec(resources=4, policy="prediction",
+                        prediction=PredictionConfig(rate_s=1e-3,
+                                                    min_samples=1))
+
+    @staticmethod
+    def _drive(gov):
+        """A fixed task trace fed straight to the governor lifecycle
+        surface; returns every observable decision."""
+        out = []
+        # three tasks become ready; α unknown ⇒ count-based prediction
+        for tid in range(3):
+            gov.monitor.on_task_ready(tid, "t", 1.0)
+        out.append(gov.tick())
+        out.append(list(gov.on_tasks_added(3)))
+        # two workers execute; one finishes fast, one slow
+        for wid, tid in ((0, 0), (1, 1)):
+            gov.monitor.on_task_execute(tid, "t", 1.0)
+            gov.on_task_started(wid)
+        gov.monitor.on_task_completed(0, "t", 1.0, 5e-4)
+        gov.on_task_finished(0)
+        gov.monitor.on_task_completed(1, "t", 1.0, 2e-3)
+        gov.on_task_finished(1)
+        out.append(gov.tick())
+        # empty polls after the queue drains (task 2 still ready)
+        for wid in (0, 1, 2, 3):
+            out.append(gov.on_poll_empty(wid))
+        out.append(gov.tick())
+        out.append(list(gov.on_tasks_added(1)))
+        return out
+
+    def test_identical_decision_sequences(self):
+        tex = ThreadExecutor(spec=self.SPEC)
+        cluster = SimCluster(MN4)
+        job = cluster.add_job(SimJobSpec(
+            name="parity", graph=TaskGraph(), governor=self.SPEC,
+            cpus=list(range(self.SPEC.resources))))
+        gov_thread, gov_sim = tex.governor, job.governor
+        assert type(gov_thread.policy) is type(gov_sim.policy)
+        assert gov_thread.spec == gov_sim.spec
+        assert self._drive(gov_thread) == self._drive(gov_sim)
+
+    def test_run_reports_share_schema(self):
+        def graph():
+            g = TaskGraph()
+            prev = None
+            for _ in range(10):
+                t = Task("link", cost=1.0, service_time=1e-5)
+                if prev is not None:
+                    t.depends_on(prev)
+                g.add(t)
+                prev = t
+            return g
+
+        r_sim = SimExecutor(MN4, spec=self.SPEC).run(graph())
+        r_thr = ThreadExecutor(spec=self.SPEC).run(graph())
+        assert isinstance(r_sim, GovernorReport)
+        assert isinstance(r_thr, GovernorReport)
+        assert r_sim.policy == r_thr.policy == "prediction"
+        assert r_sim.tasks_completed == r_thr.tasks_completed == 10

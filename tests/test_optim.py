@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          clip_by_global_norm, cosine_warmup, global_norm)

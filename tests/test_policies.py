@@ -1,13 +1,14 @@
 """Policies (busy/idle/hybrid/prediction) + Algorithm 2 mechanics."""
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.energy import EnergyMeter
 from repro.core.manager import WorkerManager, WorkerState
 from repro.core.monitoring import TaskMonitor
+from repro.core.governor import GovernorSpec, ResourceGovernor, \
+    registered_policies
 from repro.core.policies import (BusyPolicy, HybridPolicy, IdlePolicy,
-                                 PollDecision, PredictionPolicy,
-                                 make_policy)
+                                 PollDecision, PredictionPolicy)
 from repro.core.prediction import CPUPredictor, PredictionConfig
 
 
@@ -94,14 +95,17 @@ def test_prediction_resume_invariants(active, idle, ready, delta):
     assert n <= ready
 
 
-def test_factory():
-    assert make_policy("busy").name == "busy"
-    assert make_policy("idle").name == "idle"
-    assert make_policy("hybrid", spin_budget=5).spin_budget == 5
-    pred = _predictor_with_delta(1)
-    assert make_policy("prediction", pred).uses_predictions
-    try:
-        make_policy("prediction")
-        raise AssertionError("should require predictor")
-    except ValueError:
-        pass
+def test_registry_factory():
+    def build(name, **kw):
+        return ResourceGovernor(GovernorSpec(resources=8, policy=name,
+                                             **kw)).policy
+
+    assert build("busy").name == "busy"
+    assert build("idle").name == "idle"
+    assert build("hybrid", spin_budget=5).spin_budget == 5
+    pred_policy = build("prediction")
+    assert pred_policy.uses_predictions
+    assert pred_policy.predictor is not None   # governor supplied it
+    for name in ("busy", "idle", "hybrid", "prediction",
+                 "dlb-lewi", "dlb-hybrid", "dlb-prediction"):
+        assert name in registered_policies()

@@ -1,6 +1,6 @@
 """DLB broker + sharing policies (paper §3.3, Table 3)."""
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.monitoring import TaskMonitor
 from repro.core.prediction import CPUPredictor, PredictionConfig
