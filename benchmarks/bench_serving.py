@@ -30,7 +30,8 @@ def run() -> list[dict]:
 
     for policy in ("busy", "idle", "prediction"):
         engine = ServingEngine(cfg, params, max_batch=4, max_len=96)
-        scaler = AutoScaler(engine.monitor, max_replicas=4, policy=policy)
+        scaler = AutoScaler(engine.monitor, max_replicas=4, policy=policy,
+                            bus=engine.bus)
         reqs = []
         replica_ticks = 0
         tick = 0

@@ -1,16 +1,31 @@
 """Benchmark driver — one section per paper table/figure plus the
-beyond-paper serving benchmark and the roofline table.
+beyond-paper serving, roofline and open-workload benchmarks.
 
     PYTHONPATH=src python -m benchmarks.run [--only accuracy,...]
+                                            [--json-dir DIR]
+
+Sections whose ``run()`` returns rows also write a machine-readable
+``BENCH_<section>.json`` (``--json-dir``, default cwd) so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
-            "roofline"]
+            "roofline", "open_workloads"]
+
+CAPTIONS = {
+    "accuracy": "(paper Table 2)",
+    "policies": "(paper Figs 3-4)",
+    "sharing": "(paper Table 3)",
+    "overhead": "(paper §5)",
+    "open_workloads": "(beyond-paper: arrival-driven load)",
+}
 
 
 def main() -> None:
@@ -18,19 +33,26 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                     + ",".join(SECTIONS))
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_<section>.json files are written")
     args = ap.parse_args()
     wanted = args.only.split(",") if args.only else SECTIONS
+    json_dir = Path(args.json_dir)
+    json_dir.mkdir(parents=True, exist_ok=True)
 
     for name in wanted:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
-        print(f"### bench_{name} "
-              f"{'(paper Table 2)' if name == 'accuracy' else ''}"
-              f"{'(paper Figs 3-4)' if name == 'policies' else ''}"
-              f"{'(paper Table 3)' if name == 'sharing' else ''}"
-              f"{'(paper §5)' if name == 'overhead' else ''}")
+        print(f"### bench_{name} {CAPTIONS.get(name, '')}")
         t0 = time.time()
-        mod.run()
-        print(f"### bench_{name} done in {time.time() - t0:.1f}s\n")
+        rows = mod.run()
+        elapsed = time.time() - t0
+        if isinstance(rows, list) and rows:
+            out = json_dir / f"BENCH_{name}.json"
+            out.write_text(json.dumps(
+                {"section": name, "elapsed_s": round(elapsed, 2),
+                 "rows": rows}, indent=1))
+            print(f"### wrote {out}")
+        print(f"### bench_{name} done in {elapsed:.1f}s\n")
 
 
 if __name__ == "__main__":

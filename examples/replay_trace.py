@@ -1,0 +1,60 @@
+"""Trace record/replay walkthrough — record once, what-if everywhere.
+
+1. Run an *open* workload (bursty arrivals) on the real threaded
+   executor with a :class:`TraceRecorder` on its event bus.
+2. Export the trace: JSONL (replayable) + Chrome JSON (load it in
+   chrome://tracing or https://ui.perfetto.dev).
+3. Replay the recorded workload — same tasks, same measured durations,
+   same arrival timeline — deterministically in the simulator under
+   every registered closed-loop policy, and compare the reports.
+
+    PYTHONPATH=src python examples/replay_trace.py
+"""
+
+import tempfile
+from pathlib import Path
+
+from repro.core import GovernorSpec
+from repro.runtime import Task, TaskGraph, ThreadExecutor
+from repro.trace import TraceRecorder, TraceReplayer
+from repro.workloads import BurstArrivals
+
+
+def busy_work(n: int = 20_000) -> None:
+    sum(i * i for i in range(n))
+
+
+def main() -> None:
+    # -- 1. record a real run -------------------------------------------
+    graph = TaskGraph()
+    for _ in range(24):
+        graph.add(Task("compute", cost=1.0, fn=busy_work))
+    executor = ThreadExecutor(4, policy="idle")
+    recorder = TraceRecorder(bus=executor.bus)
+    live = executor.run(graph,
+                        arrivals=BurstArrivals(burst_size=6, gap=0.05))
+    print(f"live run: {live.tasks_completed} tasks in "
+          f"{live.makespan*1e3:.1f} ms ({len(recorder)} events recorded)")
+
+    # -- 2. export ------------------------------------------------------
+    out = Path(tempfile.mkdtemp(prefix="repro-trace-"))
+    jsonl = recorder.to_jsonl(out / "run.jsonl")
+    chrome = recorder.to_chrome(out / "run.chrome.json")
+    print(f"wrote {jsonl}\nwrote {chrome}  (open in chrome://tracing)")
+
+    # -- 3. what-if replay in the simulator -----------------------------
+    replayer = TraceReplayer(jsonl)
+    rebuilt, timeline = replayer.build()
+    print(f"\nrebuilt {len(rebuilt)} tasks "
+          f"({'open timeline' if timeline else 'closed graph'})")
+    print(f"\n{'policy':12s} {'time_ms':>9s} {'energy':>8s} {'EDP':>10s} "
+          f"{'resumes':>8s}")
+    for policy in ("busy", "idle", "hybrid", "prediction"):
+        spec = GovernorSpec(resources=4, policy=policy, monitoring=True)
+        r = replayer.replay(spec)
+        print(f"{policy:12s} {r.makespan*1e3:9.1f} {r.energy:8.3f} "
+              f"{r.edp:10.5f} {r.resumes:8d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ from repro.serving import AutoScaler, Request, ServingEngine
 
 def run_policy(policy: str, cfg, params) -> dict:
     engine = ServingEngine(cfg, params, max_batch=4, max_len=96)
-    scaler = AutoScaler(engine.monitor, max_replicas=4, policy=policy)
+    scaler = AutoScaler(engine.monitor, max_replicas=4, policy=policy,
+                        bus=engine.bus)
     rng = np.random.default_rng(0)
     bursts = {0: 5, 60: 5, 120: 5}
     reqs, deltas, replica_ticks, tick = [], [], 0, 0

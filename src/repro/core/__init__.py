@@ -9,6 +9,7 @@ distributed elastic controller / serving autoscaler.
 
 from .cost import CostClause, TaskTypeInfo, TaskTypeRegistry
 from .energy import CoreState, EnergyMeter, PowerModel
+from .events import EventBus, EventKind, RuntimeEvent
 from .governor import (DEFAULT_MIN_SAMPLES, GovernorReport, GovernorSpec,
                        PolicyEntry, ResourceGovernor, policy_entry,
                        register_policy, registered_policies)
@@ -24,6 +25,7 @@ from .sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
 __all__ = [
     "CostClause", "TaskTypeInfo", "TaskTypeRegistry",
     "CoreState", "EnergyMeter", "PowerModel",
+    "EventBus", "EventKind", "RuntimeEvent",
     "DEFAULT_MIN_SAMPLES", "GovernorReport", "GovernorSpec", "PolicyEntry",
     "ResourceGovernor", "policy_entry", "register_policy",
     "registered_policies",

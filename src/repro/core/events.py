@@ -1,0 +1,130 @@
+"""Unified runtime event bus.
+
+Every frontend used to hard-wire its observability: the
+:class:`~repro.runtime.scheduler.Scheduler` called the
+:class:`~repro.core.monitoring.TaskMonitor` directly, worker-state
+transitions were visible only through counters, and predictions left no
+record at all.  This module decouples producers from consumers with a
+small structured pub/sub:
+
+* producers (``Scheduler``, ``WorkerManager``, ``ResourceGovernor``,
+  ``ServingEngine``, ``SimCluster``) publish :class:`RuntimeEvent`\\ s into
+  an :class:`EventBus`;
+* consumers subscribe — the :class:`TaskMonitor` is now *one subscriber*
+  (see :meth:`TaskMonitor.subscribe`), and the
+  :class:`~repro.trace.TraceRecorder` is another, which is what makes
+  trace record/replay work identically on every frontend.
+
+Events are plain data (:meth:`RuntimeEvent.to_dict` /
+:meth:`RuntimeEvent.from_dict` round-trip through JSON), timestamps come
+from whatever clock the producer runs on (virtual time in the simulator,
+``perf_counter`` live), and publishing with no subscribers is a cheap
+no-op so closed-loop hot paths pay nothing.
+"""
+
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Mapping
+
+__all__ = ["EventKind", "RuntimeEvent", "EventBus"]
+
+
+class EventKind(enum.Enum):
+    #: task registered with a scheduler (data: deps, parent)
+    TASK_SUBMITTED = "task_submitted"
+    #: dependencies satisfied, task entered the ready queue
+    TASK_READY = "task_ready"
+    #: task popped by a worker (worker_id when the frontend knows it)
+    TASK_EXECUTE = "task_execute"
+    #: task finished (elapsed = measured seconds; data: parent)
+    TASK_COMPLETED = "task_completed"
+    #: open-workload arrival released a task into the runtime
+    TASK_ARRIVED = "task_arrived"
+    #: worker state transition (data: state, prev) — resumes, idles, lends
+    WORKER_STATE = "worker_state"
+    #: one Algorithm-1 tick (data: delta)
+    PREDICTION = "prediction"
+
+
+@dataclass(frozen=True)
+class RuntimeEvent:
+    """One structured runtime event; immutable and JSON-serializable."""
+
+    kind: EventKind
+    time: float
+    task_id: int | None = None
+    type_name: str | None = None
+    cost: float | None = None
+    worker_id: int | None = None
+    elapsed: float | None = None
+    data: Mapping[str, Any] = field(default_factory=dict)
+
+    def to_dict(self) -> dict[str, Any]:
+        d: dict[str, Any] = {"kind": self.kind.value, "time": self.time}
+        for k in ("task_id", "type_name", "cost", "worker_id", "elapsed"):
+            v = getattr(self, k)
+            if v is not None:
+                d[k] = v
+        if self.data:
+            d["data"] = dict(self.data)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RuntimeEvent":
+        d = dict(d)
+        d["kind"] = EventKind(d["kind"])
+        return cls(**d)
+
+
+class EventBus:
+    """Thread-safe pub/sub for :class:`RuntimeEvent`.
+
+    Subscribers are called synchronously, in subscription order, on the
+    publisher's thread — handlers must be fast and must not call back
+    into the publisher.  ``kinds`` filters at the bus so uninterested
+    subscribers cost nothing per event.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        # Copy-on-write subscriber list: publish() iterates a snapshot
+        # without holding the lock.
+        self._subs: tuple[tuple[Callable[[RuntimeEvent], None],
+                                frozenset[EventKind] | None], ...] = ()
+
+    def subscribe(self, handler: Callable[[RuntimeEvent], None],
+                  kinds: Iterable[EventKind] | None = None,
+                  ) -> Callable[[RuntimeEvent], None]:
+        """Register ``handler`` (for ``kinds``, or all); returns it so the
+        caller can later :meth:`unsubscribe` the same object."""
+        ks = frozenset(kinds) if kinds is not None else None
+        with self._lock:
+            self._subs = self._subs + ((handler, ks),)
+        return handler
+
+    def unsubscribe(self, handler: Callable[[RuntimeEvent], None]) -> None:
+        # Equality, not identity: each access to a bound method (e.g.
+        # ``monitor._on_event``) builds a fresh object, and bound methods
+        # compare equal by (function, instance).
+        with self._lock:
+            self._subs = tuple((h, k) for h, k in self._subs
+                               if h != handler)
+
+    @property
+    def n_subscribers(self) -> int:
+        return len(self._subs)
+
+    def interested(self, kind: EventKind) -> bool:
+        """True iff some subscriber would receive ``kind`` — the cheap
+        pre-check that lets producers skip building event payloads on
+        hot paths (a kind-filtered subscriber, e.g. the TaskMonitor,
+        does not make the bus interested in other kinds)."""
+        return any(ks is None or kind in ks for _, ks in self._subs)
+
+    def publish(self, event: RuntimeEvent) -> None:
+        for handler, kinds in self._subs:
+            if kinds is None or event.kind in kinds:
+                handler(event)

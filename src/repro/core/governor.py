@@ -33,10 +33,12 @@ Frontends come in two shapes, both served by the same governor:
 
 from __future__ import annotations
 
+import time
 from dataclasses import asdict, dataclass, field, replace
 from typing import Any, Callable, Mapping
 
 from .energy import CoreState, EnergyMeter, PowerModel
+from .events import EventBus, EventKind, RuntimeEvent
 from .manager import WorkerManager
 from .monitoring import DEFAULT_MIN_SAMPLES, AccuracyReport, TaskMonitor
 from .policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
@@ -271,17 +273,26 @@ class ResourceGovernor:
         defaults to ``range(spec.resources)``.
     t0:
         Epoch for energy integration (virtual ``now`` in the simulator).
+    bus:
+        Runtime :class:`~repro.core.events.EventBus` shared with the
+        frontend.  The governor publishes ``PREDICTION`` events on every
+        tick and hands the bus to the :class:`WorkerManager` so worker
+        state transitions are observable (trace recorders subscribe to
+        the same bus the scheduler publishes task lifecycle events on).
     """
 
     def __init__(self, spec: GovernorSpec, *,
                  clock: Callable[[], float] | None = None,
                  monitor: TaskMonitor | None = None,
                  worker_ids: list[int] | None = None,
-                 t0: float = 0.0) -> None:
+                 t0: float = 0.0,
+                 bus: EventBus | None = None) -> None:
         entry = policy_entry(spec.policy)
         self.spec = spec
         self.entry = entry
         self.sharing = entry.sharing
+        self.bus = bus
+        self._clock = clock
         needs_monitor = entry.needs_predictor or bool(spec.monitoring)
         if monitor is not None:
             self.monitor: TaskMonitor | None = monitor
@@ -310,7 +321,8 @@ class ResourceGovernor:
             for w in ids:
                 self.energy.add_core(w, CoreState.SPIN, t0)
             self.manager = WorkerManager(len(ids), self.policy, clock=clock,
-                                         energy=self.energy, worker_ids=ids)
+                                         energy=self.energy, worker_ids=ids,
+                                         bus=bus)
 
     # -- push-style lifecycle (executors: Alg. 2 hooks) ----------------------
 
@@ -343,9 +355,24 @@ class ResourceGovernor:
         """One prediction-rate tick; returns the fresh Δ (or the full
         resource count for non-predictive policies)."""
         self.policy.on_prediction_tick()
-        if self.predictor is not None:
-            return self.predictor.delta
-        return self.spec.resources
+        if self.predictor is None:
+            # Non-predictive policies tick for bookkeeping only; they
+            # make no predictions, so no PREDICTION event is published
+            # (keeps thread-recorded traces consistent with the
+            # simulator, which only schedules ticks when the policy
+            # uses predictions).
+            return self.spec.resources
+        delta = self.predictor.delta
+        self._publish_prediction(delta)
+        return delta
+
+    def _publish_prediction(self, delta: int) -> None:
+        if self.bus is None or not self.bus.interested(EventKind.PREDICTION):
+            return
+        now = (self._clock() if self._clock is not None
+               else time.perf_counter())
+        self.bus.publish(RuntimeEvent(
+            kind=EventKind.PREDICTION, time=now, data={"delta": delta}))
 
     # -- pull-style surface (autoscaler / elastic) ---------------------------
 
@@ -360,9 +387,16 @@ class ResourceGovernor:
         raw = self.policy.target(queued, active, self.spec.resources)
         load = queued + active
         if load <= 0 and raw <= 0:
-            return 0
-        floor = self.spec.min_resources if load > 0 else 0
-        return max(floor, min(raw, self.spec.resources))
+            target = 0
+        else:
+            floor = self.spec.min_resources if load > 0 else 0
+            target = max(floor, min(raw, self.spec.resources))
+        # Pull-style frontends have no tick loop; the target decision IS
+        # their prediction sample (published only for predictive
+        # policies, matching the executors).
+        if self.predictor is not None:
+            self._publish_prediction(target)
+        return target
 
     def live_load(self) -> int:
         """Live (ready + executing) instances known to the monitor."""

@@ -23,6 +23,7 @@ import threading
 from typing import Callable
 
 from .energy import CoreState, EnergyMeter
+from .events import EventBus, EventKind, RuntimeEvent
 from .policies import Policy, PollDecision
 
 __all__ = ["WorkerState", "WorkerManager"]
@@ -49,10 +50,12 @@ class WorkerManager:
     def __init__(self, n_workers: int, policy: Policy,
                  clock: Callable[[], float],
                  energy: EnergyMeter | None = None,
-                 worker_ids: list[int] | None = None) -> None:
+                 worker_ids: list[int] | None = None,
+                 bus: EventBus | None = None) -> None:
         self.policy = policy
         self.clock = clock
         self.energy = energy
+        self.bus = bus
         ids = worker_ids if worker_ids is not None else list(range(n_workers))
         self._lock = threading.Lock()
         self._states: dict[int, WorkerState] = {
@@ -96,10 +99,18 @@ class WorkerManager:
     # -- transitions ---------------------------------------------------------
 
     def _set(self, worker_id: int, state: WorkerState) -> None:
+        prev = self._states.get(worker_id)
         self._states[worker_id] = state
         if self.energy is not None:
             self.energy.set_state(worker_id, _ENERGY_STATE[state],
                                   self.clock())
+        if (self.bus is not None and prev is not state
+                and self.bus.interested(EventKind.WORKER_STATE)):
+            self.bus.publish(RuntimeEvent(
+                kind=EventKind.WORKER_STATE, time=self.clock(),
+                worker_id=worker_id,
+                data={"state": state.value,
+                      "prev": prev.value if prev else None}))
 
     def task_started(self, worker_id: int) -> None:
         with self._lock:

@@ -28,6 +28,8 @@ import math
 import threading
 from dataclasses import dataclass, field
 
+from .events import EventBus, EventKind, RuntimeEvent
+
 __all__ = [
     "EMA",
     "TypeMetrics",
@@ -143,6 +145,52 @@ class TaskMonitor:
         # parent–child subtraction and for accuracy accounting.
         self._outstanding: dict[int, float] = {}
         self._predicted_at_start: dict[int, float] = {}
+        self._subscribed_buses: list[EventBus] = []
+
+    # -- event-bus subscription -------------------------------------------
+    # The monitor is ONE subscriber on the runtime event bus, not the
+    # hard-wired callback target of the scheduler: anything that can see
+    # the bus (trace recorders, live dashboards) observes exactly the
+    # same lifecycle stream the monitor aggregates.
+
+    _LIFECYCLE_KINDS = (EventKind.TASK_READY, EventKind.TASK_EXECUTE,
+                        EventKind.TASK_COMPLETED)
+
+    def subscribe(self, bus: EventBus) -> "TaskMonitor":
+        """Attach this monitor to ``bus`` (idempotent per bus — e.g. a
+        governor-owned monitor handed to a Scheduler that shares the
+        same bus must not double-count events)."""
+        with self._lock:
+            if any(b is bus for b in self._subscribed_buses):
+                return self
+            self._subscribed_buses.append(bus)
+        bus.subscribe(self._on_event, kinds=self._LIFECYCLE_KINDS)
+        return self
+
+    def unsubscribe(self, bus: EventBus) -> None:
+        """Detach from ``bus`` (no-op if not subscribed) — run teardown
+        for per-run monitors sharing a longer-lived bus."""
+        with self._lock:
+            if not any(b is bus for b in self._subscribed_buses):
+                return
+            self._subscribed_buses = [b for b in self._subscribed_buses
+                                      if b is not bus]
+        bus.unsubscribe(self._on_event)
+
+    def _on_event(self, ev: RuntimeEvent) -> None:
+        if ev.task_id is None or ev.type_name is None or ev.cost is None:
+            raise ValueError(
+                f"malformed {ev.kind.value} event: task_id, type_name "
+                f"and cost are required, got {ev!r}")
+        if ev.kind is EventKind.TASK_READY:
+            self.on_task_ready(ev.task_id, ev.type_name, ev.cost)
+        elif ev.kind is EventKind.TASK_EXECUTE:
+            self.on_task_execute(ev.task_id, ev.type_name, ev.cost)
+        elif ev.kind is EventKind.TASK_COMPLETED:
+            self.on_task_completed(ev.task_id, ev.type_name, ev.cost,
+                                   ev.elapsed if ev.elapsed is not None
+                                   else 0.0,
+                                   parent_id=ev.data.get("parent"))
 
     # -- type helpers ------------------------------------------------------
 

@@ -10,7 +10,6 @@
 
 from __future__ import annotations
 
-import jax
 
 from . import ref
 from .flash_attention import flash_attention

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import SHAPES, ShapeSpec, cell_runnable, get_config
-from ..models import (ModelConfig, Rules, cache_specs, init_cache,
+from ..models import (ModelConfig, Rules, init_cache,
                       init_params, param_specs, prefill)
 from ..optim import AdamWConfig, adamw_init
 from ..train.steps import StepConfig, make_serve_step, make_train_step

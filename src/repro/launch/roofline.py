@@ -25,8 +25,6 @@ Terms (per device, seconds):
 
 from __future__ import annotations
 
-import json
-import math
 import re
 from dataclasses import dataclass, field
 

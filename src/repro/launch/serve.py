@@ -39,7 +39,7 @@ def main() -> None:
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_len=128)
     scaler = AutoScaler(engine.monitor, max_replicas=args.max_batch,
-                        policy=args.policy)
+                        policy=args.policy, bus=engine.bus)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     reqs = []

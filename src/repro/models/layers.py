@@ -11,7 +11,6 @@ for the inner block math on real TPUs.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,16 +1,20 @@
 """Ready-queue scheduler with dependency tracking.
 
-Emits the monitoring lifecycle events (ready / execute / completed) so the
-:class:`~repro.core.monitoring.TaskMonitor` sees exactly the transitions of
-paper Fig. 2.  FIFO within a queue; thread-safe.
+Publishes the task lifecycle (submitted / ready / execute / completed /
+arrived) as :class:`~repro.core.events.RuntimeEvent`\\ s on an
+:class:`~repro.core.events.EventBus` — the
+:class:`~repro.core.monitoring.TaskMonitor` is one subscriber (it sees
+exactly the transitions of paper Fig. 2), trace recorders are another.
+FIFO within a queue; thread-safe.
 """
 
 from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Iterable
+from typing import Callable, Iterable
 
+from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.monitoring import TaskMonitor
 from .task import Task
 
@@ -18,12 +22,28 @@ __all__ = ["Scheduler"]
 
 
 class Scheduler:
-    def __init__(self, monitor: TaskMonitor | None = None) -> None:
+    def __init__(self, monitor: TaskMonitor | None = None,
+                 bus: EventBus | None = None,
+                 clock: Callable[[], float] | None = None) -> None:
+        self.bus = bus if bus is not None else EventBus()
+        self.clock = clock if clock is not None else (lambda: 0.0)
         self.monitor = monitor
+        if monitor is not None:
+            monitor.subscribe(self.bus)
         self._lock = threading.Lock()
         self._ready: deque[Task] = deque()
         self._pending = 0          # submitted, not yet completed
         self._ready_count = 0
+
+    def _publish(self, kind: EventKind, task: Task, *,
+                 worker_id: int | None = None, elapsed: float | None = None,
+                 data: dict | None = None) -> None:
+        if not self.bus.interested(kind):
+            return
+        self.bus.publish(RuntimeEvent(
+            kind=kind, time=self.clock(), task_id=task.task_id,
+            type_name=task.type_name, cost=task.cost, worker_id=worker_id,
+            elapsed=elapsed, data=data or {}))
 
     # -- submission ------------------------------------------------------
 
@@ -36,6 +56,16 @@ class Scheduler:
                 if not d.done:
                     task.unmet += 1
                     d.successors.append(task)
+            # skip payload build on hot paths (the monitor's kind filter
+            # does not cover SUBMITTED, so monitored-but-untraced runs
+            # pay nothing here)
+            if self.bus.interested(EventKind.TASK_SUBMITTED):
+                self._publish(
+                    EventKind.TASK_SUBMITTED, task,
+                    data={"deps": [d.task_id for d in task.deps],
+                          "parent": task.parent.task_id if task.parent
+                          else None,
+                          "release_time": task.release_time})
             if task.unmet == 0:
                 self._push_ready_locked(task)
                 return True
@@ -52,24 +82,21 @@ class Scheduler:
     def _push_ready_locked(self, task: Task) -> None:
         self._ready.append(task)
         self._ready_count += 1
-        if self.monitor is not None:
-            self.monitor.on_task_ready(task.task_id, task.type_name,
-                                       task.cost)
+        self._publish(EventKind.TASK_READY, task)
 
     # -- polling -----------------------------------------------------------
 
-    def poll(self) -> Task | None:
+    def poll(self, worker_id: int | None = None) -> Task | None:
         with self._lock:
             if not self._ready:
                 return None
             task = self._ready.popleft()
             self._ready_count -= 1
-        if self.monitor is not None:
-            self.monitor.on_task_execute(task.task_id, task.type_name,
-                                         task.cost)
+        self._publish(EventKind.TASK_EXECUTE, task, worker_id=worker_id)
         return task
 
-    def complete(self, task: Task, elapsed: float) -> list[Task]:
+    def complete(self, task: Task, elapsed: float,
+                 worker_id: int | None = None) -> list[Task]:
         """Mark done; returns tasks that *became ready* as a result."""
         newly_ready: list[Task] = []
         with self._lock:
@@ -80,10 +107,12 @@ class Scheduler:
                 if s.unmet == 0:
                     self._push_ready_locked(s)
                     newly_ready.append(s)
-        if self.monitor is not None:
-            self.monitor.on_task_completed(
-                task.task_id, task.type_name, task.cost, elapsed,
-                parent_id=task.parent.task_id if task.parent else None)
+        if self.bus.interested(EventKind.TASK_COMPLETED):
+            self._publish(
+                EventKind.TASK_COMPLETED, task, worker_id=worker_id,
+                elapsed=elapsed,
+                data={"parent": task.parent.task_id if task.parent
+                      else None})
         return newly_ready
 
     # -- state ---------------------------------------------------------------

@@ -34,12 +34,14 @@ from dataclasses import dataclass, replace
 from typing import Any
 
 from ..core.energy import CoreState, PowerModel
+from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
                              GovernorSpec, ResourceGovernor)
 from ..core.manager import WorkerState
 from ..core.policies import PollDecision
 from ..core.prediction import DEFAULT_PREDICTION_RATE_S, PredictionConfig
 from ..core.sharing import ResourceBroker, SharingPolicy
+from ..workloads.arrivals import ArrivalProcess
 from .machine import MachineModel
 from .scheduler import Scheduler
 from .task import Task, TaskGraph
@@ -50,7 +52,7 @@ __all__ = ["SimJobSpec", "SimReport", "SimCluster", "SimExecutor"]
 SimReport = GovernorReport
 
 # Event kinds (sorted lexically only via seq tiebreak; kind order irrelevant)
-_FINISH, _TICK, _RESUME, _SPIN_EXPIRE = range(4)
+_FINISH, _TICK, _RESUME, _SPIN_EXPIRE, _ARRIVE = range(5)
 
 
 @dataclass
@@ -73,6 +75,13 @@ class SimJobSpec:
     min_samples: int = DEFAULT_MIN_SAMPLES
     power: PowerModel | None = None
     governor: GovernorSpec | None = None  # overrides the kwargs above
+    #: open-workload mode: release tasks over virtual time instead of
+    #: submitting the whole graph at t=0.  The process stamps
+    #: ``Task.release_time`` in task order; tasks that already carry a
+    #: release time (e.g. a replayed trace) are honored when this is None.
+    arrivals: ArrivalProcess | None = None
+    #: runtime event bus shared with trace recorders; None ⇒ per-job bus
+    bus: EventBus | None = None
 
     def governor_spec(self, n_cpus: int) -> GovernorSpec:
         if self.governor is not None:
@@ -99,11 +108,13 @@ class _SimJob:
         self.name = spec.name
         self.graph = spec.graph
         self.cpus = cpus
+        self.bus = spec.bus if spec.bus is not None else EventBus()
         self.governor = ResourceGovernor(
             spec.governor_spec(len(cpus)), clock=lambda: cluster.now,
-            worker_ids=list(cpus), t0=cluster.now)
+            worker_ids=list(cpus), t0=cluster.now, bus=self.bus)
         self.monitor = self.governor.monitor
-        self.scheduler = Scheduler(self.monitor)
+        self.scheduler = Scheduler(self.monitor, bus=self.bus,
+                                   clock=lambda: cluster.now)
         self.predictor = self.governor.predictor
         self.policy = self.governor.policy
         self.energy = self.governor.energy
@@ -115,10 +126,14 @@ class _SimJob:
         self.borrowed: set[int] = set()
         self.t_done: float | None = None
         self.monitor_events = 0
+        #: tasks released over time that have not been submitted yet —
+        #: an open job is done only when arrivals are exhausted AND the
+        #: scheduler drained.
+        self.arrivals_pending = 0
 
     @property
     def done(self) -> bool:
-        return self.scheduler.drained()
+        return self.arrivals_pending == 0 and self.scheduler.drained()
 
     def spinning_workers(self) -> list[int]:
         return [w for w, s in self.manager.states().items()
@@ -156,9 +171,8 @@ class SimCluster:
     # -- main loop --------------------------------------------------------------
 
     def run(self, max_events: int = 50_000_000) -> dict[str, SimReport]:
-        m = self.machine
         for job in self.jobs.values():
-            job.scheduler.submit_all(job.graph.tasks)
+            self._submit_or_schedule(job)
         for job in self.jobs.values():
             self._dispatch(job)
         for job in self.jobs.values():
@@ -181,6 +195,8 @@ class SimCluster:
                 self._on_resume(*payload)
             elif kind == _SPIN_EXPIRE:
                 self._on_spin_expire(*payload)
+            elif kind == _ARRIVE:
+                self._on_arrive(*payload)
             if all(j.done for j in self.jobs.values()):
                 break
         reports = {}
@@ -192,6 +208,12 @@ class SimCluster:
             t_end = job.t_done if job.t_done is not None else self.now
             job.energy.finish(t_end)
             reports[job.name] = self._report(job)
+        for job in self.jobs.values():
+            # Per-run monitors must not stay subscribed to a bus that
+            # outlives the run (a reused SimExecutor keeps one bus
+            # across runs); external subscribers (recorders) remain.
+            if job.monitor is not None:
+                job.monitor.unsubscribe(job.bus)
         return reports
 
     def _report(self, job: _SimJob) -> SimReport:
@@ -203,16 +225,42 @@ class SimCluster:
             monitor_events=job.monitor_events,
         )
 
+    def _submit_or_schedule(self, job: _SimJob) -> None:
+        """Closed tasks go to the scheduler at t=0; tasks with a release
+        time (from ``spec.arrivals`` or pre-stamped, e.g. by a replayed
+        trace) become ``_ARRIVE`` events on the virtual timeline."""
+        if job.spec.arrivals is not None:
+            job.spec.arrivals.assign(job.graph.tasks)
+        for task in job.graph.tasks:
+            rt = task.release_time
+            if rt is None or rt <= self.now:
+                job.scheduler.submit(task)
+            else:
+                job.arrivals_pending += 1
+                self._push(rt, _ARRIVE, (job.name, task))
+
     # -- event handlers -----------------------------------------------------------
+
+    def _on_arrive(self, job_name: str, task: Task) -> None:
+        job = self.jobs[job_name]
+        job.arrivals_pending -= 1
+        if job.bus.interested(EventKind.TASK_ARRIVED):
+            job.bus.publish(RuntimeEvent(
+                kind=EventKind.TASK_ARRIVED, time=self.now,
+                task_id=task.task_id, type_name=task.type_name,
+                cost=task.cost))
+        became_ready = job.scheduler.submit(task)
+        if became_ready:
+            self._work_added(job)
 
     def _on_finish(self, job_name: str, cpu: int, task: Task,
                    elapsed: float) -> None:
         job = self.jobs[job_name]
         job.manager.task_finished(cpu)
-        newly = job.scheduler.complete(task, elapsed)
+        newly = job.scheduler.complete(task, elapsed, worker_id=cpu)
         if job.monitor is not None:
             job.monitor_events += 3  # ready/execute/complete round trip
-        if job.scheduler.drained():
+        if job.done:
             job.t_done = self.now
         if newly:
             self._work_added(job)
@@ -291,7 +339,7 @@ class SimCluster:
     # -- mechanics ----------------------------------------------------------------
 
     def _poll(self, job: _SimJob, cpu: int) -> None:
-        task = job.scheduler.poll()
+        task = job.scheduler.poll(worker_id=cpu)
         if task is not None:
             self._start(job, cpu, task)
             return
@@ -324,7 +372,7 @@ class SimCluster:
             spinners = job.spinning_workers()
             if not spinners:
                 return
-            task = job.scheduler.poll()
+            task = job.scheduler.poll(worker_id=spinners[0])
             if task is None:
                 return
             self._start(job, spinners[0], task)
@@ -404,7 +452,13 @@ class SimCluster:
 
 
 class SimExecutor:
-    """Convenience wrapper: run ONE task graph under ONE policy."""
+    """Convenience wrapper: run ONE task graph under ONE policy.
+
+    Reusable: each :meth:`run` builds a fresh per-run job spec with
+    :func:`dataclasses.replace`, so no state (graph, arrivals) leaks
+    across runs.  ``self.bus`` is stable across runs — attach a
+    :class:`~repro.trace.TraceRecorder` to it before calling :meth:`run`.
+    """
 
     def __init__(self, machine: MachineModel, policy: str = "busy",
                  n_cpus: int | None = None, monitoring: bool | None = None,
@@ -412,12 +466,14 @@ class SimExecutor:
                  spin_budget: int = 100,
                  min_samples: int = DEFAULT_MIN_SAMPLES,
                  power: PowerModel | None = None,
-                 spec: GovernorSpec | None = None) -> None:
+                 spec: GovernorSpec | None = None,
+                 bus: EventBus | None = None) -> None:
         self.machine = machine
+        self.bus = bus if bus is not None else EventBus()
         if spec is not None:
             self.spec = SimJobSpec(name="job0", graph=TaskGraph(),
                                    cpus=list(range(spec.resources)),
-                                   governor=spec)
+                                   governor=spec, bus=self.bus)
         else:
             self.spec = SimJobSpec(
                 name="job0", graph=TaskGraph(), policy=policy,
@@ -425,10 +481,13 @@ class SimExecutor:
                                 else machine.n_cores)),
                 monitoring=monitoring, prediction_rate_s=prediction_rate_s,
                 spin_budget=spin_budget, min_samples=min_samples,
-                power=power)
+                power=power, bus=self.bus)
 
-    def run(self, graph: TaskGraph) -> SimReport:
-        self.spec.graph = graph
+    def run(self, graph: TaskGraph,
+            arrivals: ArrivalProcess | None = None) -> SimReport:
+        spec = replace(self.spec, graph=graph,
+                       arrivals=(arrivals if arrivals is not None
+                                 else self.spec.arrivals))
         cluster = SimCluster(self.machine)
-        cluster.add_job(self.spec)
-        return cluster.run()[self.spec.name]
+        cluster.add_job(spec)
+        return cluster.run()[spec.name]

@@ -31,6 +31,11 @@ class Task:
     service_time: float | None = None       # virtual seconds (simulator)
     parent: "Task | None" = None
     deps: list["Task"] = field(default_factory=list)
+    #: open-workload release time (virtual seconds from run start); None
+    #: means the task is part of the closed graph submitted at t=0.  An
+    #: :class:`~repro.workloads.arrivals.ArrivalProcess` or a replayed
+    #: trace fills it in; dependencies still gate readiness after release.
+    release_time: float | None = None
     # -- filled by the scheduler ------------------------------------------
     task_id: int = field(default_factory=lambda: next(_ids))
     unmet: int = 0

@@ -12,21 +12,38 @@ The whole resource stack is declared by a
 :class:`~repro.core.governor.GovernorSpec` and assembled by
 :class:`~repro.core.governor.ResourceGovernor`; the executor only owns the
 threads, the condition variable and the scheduler.
+
+Two execution modes share the worker loop:
+
+* **closed** — :meth:`run` submits a whole graph at t=0 and drains it
+  (the classic batch mode; with ``arrivals`` the graph is instead
+  released over wall time from the arrival timeline);
+* **open** — :meth:`start` spawns workers with no work, :meth:`submit`
+  feeds tasks incrementally from any thread, and :meth:`close` waits for
+  arrivals to stop and the queue to drain (termination = closed ∧
+  drained).
+
+All task lifecycle, worker state and prediction events are published on
+``self.bus`` — attach a :class:`~repro.trace.TraceRecorder` to record a
+run for deterministic what-if replay in the simulator.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from typing import Iterable
 
 from ..core.energy import PowerModel
+from ..core.events import EventBus
 from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
                              GovernorSpec, ResourceGovernor)
 from ..core.manager import WorkerState
 from ..core.policies import PollDecision
 from ..core.prediction import PredictionConfig
+from ..workloads.arrivals import ArrivalProcess
 from .scheduler import Scheduler
-from .task import TaskGraph
+from .task import Task, TaskGraph
 
 __all__ = ["ThreadExecutor", "ExecutorReport"]
 
@@ -41,7 +58,8 @@ class ThreadExecutor:
                  prediction_rate_s: float = 1e-3,
                  spin_budget: int = 100,
                  min_samples: int = DEFAULT_MIN_SAMPLES,
-                 power: PowerModel | None = None) -> None:
+                 power: PowerModel | None = None,
+                 bus: EventBus | None = None) -> None:
         if spec is None:
             if n_workers is None:
                 raise ValueError("need n_workers (or a GovernorSpec)")
@@ -56,7 +74,9 @@ class ThreadExecutor:
         self.n_workers = spec.resources
         self.policy_name = spec.policy
         self._t0 = time.perf_counter()
-        self.governor = ResourceGovernor(spec, clock=self._clock)
+        self.bus = bus if bus is not None else EventBus()
+        self.governor = ResourceGovernor(spec, clock=self._clock,
+                                         bus=self.bus)
         if self.governor.sharing:
             raise ValueError(
                 "LEND policies need a broker-aware executor (use the "
@@ -66,7 +86,8 @@ class ThreadExecutor:
         self.policy = self.governor.policy
         self.energy = self.governor.energy
         self.manager = self.governor.manager
-        self.scheduler = Scheduler(self.monitor)
+        self.scheduler = Scheduler(self.monitor, bus=self.bus,
+                                   clock=self._clock)
         # Alg. 1 uses spec.prediction.rate_s for its workload math, but a
         # real-time ticker thread cannot honor microsecond rates (the
         # simulator's 50 µs default would busy-loop a core); floor the
@@ -74,6 +95,14 @@ class ThreadExecutor:
         self.prediction_rate_s = max(spec.prediction.rate_s, 1e-3)
         self._cv = threading.Condition()
         self._shutdown = False
+        # Open-workload mode: while the run is "open", a drained queue
+        # does NOT terminate the workers — more submissions may arrive.
+        self._closing = False
+        self._threads: list[threading.Thread] = []
+        self._ticker_thread: threading.Thread | None = None
+        self._t_start: float | None = None
+        self._submit_lock = threading.Lock()
+        self._submitted_total = 0
 
     def _clock(self) -> float:
         return time.perf_counter() - self._t0
@@ -82,7 +111,7 @@ class ThreadExecutor:
 
     def _worker(self, wid: int) -> None:
         while True:
-            task = self.scheduler.poll()
+            task = self.scheduler.poll(worker_id=wid)
             if task is not None:
                 self.governor.on_task_started(wid)
                 t0 = time.perf_counter()
@@ -92,10 +121,11 @@ class ThreadExecutor:
                     time.sleep(task.service_time)
                 elapsed = time.perf_counter() - t0
                 self.governor.on_task_finished(wid)
-                newly = self.scheduler.complete(task, elapsed)
+                newly = self.scheduler.complete(task, elapsed,
+                                                worker_id=wid)
                 if newly:
                     self._on_work_added()
-                if self.scheduler.drained():
+                if self._closing and self.scheduler.drained():
                     self._finish()
                 continue
             if self._shutdown:
@@ -137,23 +167,105 @@ class ThreadExecutor:
             if self.scheduler.ready_count > 0:
                 self._on_work_added()
 
-    # -- public API -----------------------------------------------------------------
+    # -- open-workload API ----------------------------------------------------
 
-    def run(self, graph: TaskGraph) -> GovernorReport:
-        self.scheduler.submit_all(graph.tasks)
-        threads = [threading.Thread(target=self._worker, args=(w,),
-                                    name=f"worker-{w}", daemon=True)
-                   for w in range(self.n_workers)]
-        ticker = threading.Thread(target=self._ticker, name="ticker",
-                                  daemon=True)
-        start = time.perf_counter()
-        for t in threads:
+    def start(self) -> "ThreadExecutor":
+        """Spawn workers with no work yet; feed them via :meth:`submit`.
+
+        The run stays open — workers park/spin through empty phases per
+        policy — until :meth:`close` is called.
+        """
+        if self._threads:
+            raise RuntimeError("executor already started")
+        self._threads = [threading.Thread(target=self._worker, args=(w,),
+                                          name=f"worker-{w}", daemon=True)
+                         for w in range(self.n_workers)]
+        self._ticker_thread = threading.Thread(target=self._ticker,
+                                               name="ticker", daemon=True)
+        self._t_start = time.perf_counter()
+        # Re-epoch the clock: the energy meter has been integrating SPIN
+        # power since construction, but the run starts now — otherwise an
+        # executor built ahead of its first submission (the natural open-
+        # mode shape) reports energy over a window makespan never covers.
+        self._t0 = self._t_start
+        for t in self._threads:
             t.start()
-        ticker.start()
-        for t in threads:
+        self._ticker_thread.start()
+        return self
+
+    def submit(self, work: Task | TaskGraph | Iterable[Task]) -> int:
+        """Incrementally submit a task, a graph, or an iterable of tasks;
+        returns how many became ready immediately.  Thread-safe; callable
+        before :meth:`start` (work queues up) or while running."""
+        if isinstance(work, Task):
+            tasks: list[Task] = [work]
+        elif isinstance(work, TaskGraph):
+            tasks = work.tasks
+        else:
+            tasks = list(work)
+        with self._submit_lock:
+            self._submitted_total += len(tasks)
+        n_ready = self.scheduler.submit_all(tasks)
+        if n_ready:
+            self._on_work_added()
+        return n_ready
+
+    def close(self) -> GovernorReport:
+        """No more submissions: wait until drained, stop workers, report.
+
+        Termination = arrivals exhausted (the caller stopped submitting)
+        ∧ queue drained — the open-workload contract.
+        """
+        if not self._threads:
+            raise RuntimeError("executor was never started")
+        self._closing = True
+        if self.scheduler.drained():
+            self._finish()
+        for t in self._threads:
             t.join()
-        ticker.join()
-        makespan = time.perf_counter() - start
+        assert self._ticker_thread is not None
+        self._ticker_thread.join()
+        assert self._t_start is not None
+        makespan = time.perf_counter() - self._t_start
         self.governor.finish(self._clock())
         return self.governor.report(makespan=makespan,
-                                    tasks_fallback=len(graph.tasks))
+                                    tasks_fallback=self._submitted_total)
+
+    # -- public API -----------------------------------------------------------------
+
+    def run(self, graph: TaskGraph,
+            arrivals: ArrivalProcess | None = None) -> GovernorReport:
+        """Execute ``graph`` to completion and report.
+
+        Without ``arrivals`` this is the closed-world batch mode (whole
+        graph submitted at t=0) — unless tasks carry pre-stamped
+        ``release_time``\\ s (e.g. a replayed trace), which are honored
+        exactly like the simulator honors them.  With ``arrivals``,
+        tasks are released over wall time following the process timeline
+        — an open-workload run on real threads.
+        """
+        if not graph.tasks:
+            # A graph with no tasks is already drained: report without
+            # spawning workers (a worker-side shutdown could otherwise
+            # never trigger — it only fires on task completion).
+            self.governor.finish(self._clock())
+            return self.governor.report(makespan=0.0)
+        if arrivals is not None:
+            timed = list(zip(graph.tasks, arrivals.assign(graph.tasks)))
+        else:
+            timed = [(t, t.release_time or 0.0) for t in graph.tasks]
+            timed.sort(key=lambda p: p[1])   # pre-stamped order is free
+        if timed[-1][1] <= 0.0:
+            self._closing = True
+            self.submit(graph)
+            self.start()
+            return self.close()
+        # Open mode: this thread plays the arrival timeline in real time.
+        self.start()
+        t_begin = time.perf_counter()
+        for task, rt in timed:
+            delay = rt - (time.perf_counter() - t_begin)
+            if delay > 0:
+                time.sleep(delay)
+            self.submit(task)
+        return self.close()

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from ..core.events import EventBus
 from ..core.governor import GovernorSpec, ResourceGovernor
 from ..core.monitoring import TaskMonitor
 from ..core.prediction import PredictionConfig
@@ -40,6 +41,9 @@ class AutoScaler:
     min_replicas: int = 1
     rate_s: float = 0.05
     spec: GovernorSpec | None = None    # overrides the kwargs above
+    #: runtime event bus (e.g. ``ServingEngine.bus``) — Δ decisions are
+    #: published as PREDICTION events so serving traces record them
+    bus: EventBus | None = None
 
     def __post_init__(self) -> None:
         if self.spec is None:
@@ -54,7 +58,8 @@ class AutoScaler:
             self.min_replicas = self.spec.min_resources
             self.policy = self.spec.policy
             self.rate_s = self.spec.prediction.rate_s
-        self.governor = ResourceGovernor(self.spec, monitor=self.monitor)
+        self.governor = ResourceGovernor(self.spec, monitor=self.monitor,
+                                         bus=self.bus)
         self.predictor = self.governor.predictor
 
     def target(self, queued: int, active: int) -> int:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.governor import GovernorSpec, ResourceGovernor
 from ..core.monitoring import TaskMonitor
 from ..models import ModelConfig, decode_step, init_cache, prefill
@@ -74,30 +75,40 @@ def _scatter_cache(dst: dict, src: dict, slot: int) -> dict:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, monitor: TaskMonitor | None = None,
-                 governor: ResourceGovernor | None = None) -> None:
+                 governor: ResourceGovernor | None = None,
+                 bus: EventBus | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # The engine is the workload side of the paper's loop: it only
-        # feeds monitor events.  The monitor is owned by a governor —
-        # either one passed in (shared with an AutoScaler), or a minimal
-        # monitoring-only stack assembled here.
+        # The engine is the workload side of the paper's loop: it
+        # publishes request lifecycle events on ``self.bus``; the monitor
+        # (owned by a governor — either one passed in and shared with an
+        # AutoScaler, or a minimal monitoring-only stack assembled here)
+        # subscribes, and so can a TraceRecorder for record/replay.
+        self.bus = bus if bus is not None else EventBus()
         if governor is None:
             governor = ResourceGovernor(
                 GovernorSpec(resources=max_batch, monitoring=True),
-                monitor=monitor)
+                monitor=monitor, bus=self.bus)
         elif monitor is not None and governor.monitor is not monitor:
             raise ValueError(
                 "conflicting monitor and governor arguments: the engine "
                 "feeds events to governor.monitor, so pass one or the "
                 "other (or a governor built over that monitor)")
+        if governor.bus is None:
+            # Pull-style governors carry no worker manager, so adopting
+            # the engine's bus late only affects where PREDICTION
+            # samples are published — serving traces then show the
+            # autoscaler's Δ decisions like every other frontend.
+            governor.bus = self.bus
         self.governor = governor
         if governor.monitor is None:
             raise ValueError(
                 "ServingEngine needs a monitoring governor — build it "
                 "from a GovernorSpec with monitoring=True")
         self.monitor = governor.monitor
+        self.monitor.subscribe(self.bus)
         self.queue: list[Request] = []
         self.active: list[Request | None] = [None] * max_batch
         self.cache = init_cache(cfg, max_batch, max_len)
@@ -121,10 +132,19 @@ class ServingEngine:
 
     # -- request lifecycle ---------------------------------------------------
 
+    def _publish(self, kind: EventKind, task_id: int, type_name: str,
+                 cost: float, elapsed: float | None = None) -> None:
+        self.bus.publish(RuntimeEvent(
+            kind=kind, time=time.perf_counter(), task_id=task_id,
+            type_name=type_name, cost=cost, elapsed=elapsed))
+
     def submit(self, req: Request) -> Request:
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
-        self.monitor.on_task_ready(req.request_id, "request", req.cost)
+        self._publish(EventKind.TASK_SUBMITTED, req.request_id, "request",
+                      req.cost)
+        self._publish(EventKind.TASK_READY, req.request_id, "request",
+                      req.cost)
         return req
 
     def _admit(self) -> None:
@@ -132,8 +152,8 @@ class ServingEngine:
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            self.monitor.on_task_execute(req.request_id, "request",
-                                         req.cost)
+            self._publish(EventKind.TASK_EXECUTE, req.request_id,
+                          "request", req.cost)
             t0 = time.perf_counter()
             toks = req.prompt
             if self._bucketing:
@@ -151,9 +171,8 @@ class ServingEngine:
             self.pos = self.pos.at[slot].set(len(req.prompt))
             self.remaining[slot] = req.max_new_tokens - 1
             elapsed = time.perf_counter() - t0
-            self.monitor.on_task_completed(
-                req.request_id * 2 + 1, "prefill", float(len(req.prompt)),
-                elapsed)
+            self._publish(EventKind.TASK_COMPLETED, req.request_id * 2 + 1,
+                          "prefill", float(len(req.prompt)), elapsed)
 
     # -- decode tick ------------------------------------------------------------
 
@@ -171,8 +190,8 @@ class ServingEngine:
         self.tokens = nxt
         self.pos = self.pos + 1
         elapsed = time.perf_counter() - t0
-        self.monitor.on_task_completed(
-            next(_ids) * 2, "decode_tick", float(len(live)), elapsed)
+        self._publish(EventKind.TASK_COMPLETED, next(_ids) * 2,
+                      "decode_tick", float(len(live)), elapsed)
         self.ticks += 1
         nxt_host = np.asarray(nxt)
         for s in live:
@@ -186,9 +205,9 @@ class ServingEngine:
             if self.remaining[s] <= 0 or hit_eos \
                     or int(self.pos[s]) >= self.max_len - 1:
                 req.done_at = time.perf_counter()
-                self.monitor.on_task_completed(
-                    req.request_id, "request", req.cost,
-                    req.done_at - req.submitted_at)
+                self._publish(EventKind.TASK_COMPLETED, req.request_id,
+                              "request", req.cost,
+                              req.done_at - req.submitted_at)
                 self.active[s] = None
         return len(live)
 

@@ -1,0 +1,177 @@
+"""Trace replay: recorded events → task graph + arrival timeline → sim.
+
+A trace records *what actually happened*: which tasks existed (type,
+cost, dependency ids, parent links), when each was released into the
+runtime, and how long each really took.  :class:`TraceReplayer` rebuilds
+that as a fresh :class:`~repro.runtime.task.TaskGraph` whose
+``service_time`` is the measured duration and whose ``release_time`` is
+the recorded arrival timeline — so a workload recorded once (on the
+threaded executor, the serving engine, or the simulator itself) replays
+deterministically in the simulator under any
+:class:`~repro.core.governor.GovernorSpec`.
+
+Replays run on a **neutral machine** (``core_speed=1.0``,
+``monitor_event_overhead=0``) because recorded durations are already
+end-to-end measurements — scaling them again would double-count.  Pass
+``machine=TraceReplayer.replay_machine(MN4)`` to keep a specific model's
+latency constants (this is what makes a sim→sim round trip reproduce the
+original decision sequence exactly).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from pathlib import Path
+from typing import Iterable
+
+from ..core.events import EventKind, RuntimeEvent
+from ..core.governor import GovernorReport, GovernorSpec
+from ..runtime.machine import MachineModel
+from ..runtime.task import Task, TaskGraph
+from ..workloads.arrivals import FixedTimeline
+from .recorder import TraceRecorder
+
+__all__ = ["TraceReplayer"]
+
+
+class TraceReplayer:
+    """Builds replayable workloads from a recorded event stream."""
+
+    def __init__(self, events: Iterable[RuntimeEvent] | TraceRecorder
+                 | str | Path) -> None:
+        if isinstance(events, TraceRecorder):
+            self.events = list(events.events)
+        elif isinstance(events, (str, Path)):
+            self.events = list(TraceRecorder.from_jsonl(events).events)
+        else:
+            self.events = list(events)
+
+    @staticmethod
+    def replay_machine(machine: MachineModel) -> MachineModel:
+        """A machine whose latency constants match ``machine`` but which
+        does not re-scale (or re-charge overhead on) recorded durations."""
+        return replace(machine, name=f"{machine.name}-replay",
+                       core_speed=1.0, monitor_event_overhead=0.0)
+
+    # -- graph reconstruction ----------------------------------------------
+
+    def build(self) -> tuple[TaskGraph, FixedTimeline | None]:
+        """Reconstruct ``(graph, arrivals)`` from the trace.
+
+        Only tasks with a ``TASK_SUBMITTED`` event are materialized
+        (orphan completions — e.g. serving prefill/decode-tick samples —
+        are instrumentation, not schedulable work).  Each build returns
+        *fresh* :class:`Task` objects, so the result can be executed
+        repeatedly (once per candidate policy) without state leaking.
+        ``arrivals`` is ``None`` for a closed-world trace (everything
+        released at t=0); otherwise it is the recorded timeline and the
+        graph's tasks carry the matching ``release_time``.
+        """
+        submitted: list[RuntimeEvent] = []
+        elapsed: dict[int, float] = {}
+        exec_at: dict[int, float] = {}
+        for ev in self.events:
+            if ev.kind is EventKind.TASK_SUBMITTED:
+                submitted.append(ev)
+            elif ev.kind is EventKind.TASK_EXECUTE and ev.task_id is not None:
+                exec_at[ev.task_id] = ev.time
+            elif (ev.kind is EventKind.TASK_COMPLETED
+                  and ev.task_id is not None and ev.elapsed is not None):
+                # Prefer the EXECUTE→COMPLETED interval: it is the
+                # resource *holding* time on every frontend.  A serving
+                # request's published ``elapsed`` is its sojourn
+                # (queueing included), which must not be replayed as
+                # service time; in the simulator the interval equals the
+                # published elapsed exactly, keeping round trips exact.
+                start = exec_at.get(ev.task_id)
+                elapsed[ev.task_id] = (ev.time - start if start is not None
+                                       else ev.elapsed)
+        if not submitted:
+            return TaskGraph(), None
+        missing = [ev.task_id for ev in submitted
+                   if ev.task_id not in elapsed]
+        if missing:
+            raise ValueError(
+                f"trace is not replayable: {len(missing)} submitted "
+                f"task(s) never completed (first: {missing[:5]})")
+
+        t0 = min(ev.time for ev in submitted)
+        # Submissions that precede any execution are the closed-world
+        # part of the workload: a batch-submitted graph records wall
+        # timestamps a few µs apart, and replaying that recording jitter
+        # as an arrival timeline would be noise, not workload shape.
+        first_exec = min((ev.time for ev in self.events
+                          if ev.kind is EventKind.TASK_EXECUTE),
+                         default=float("inf"))
+        graph = TaskGraph()
+        by_old_id: dict[int, Task] = {}
+        release: list[float] = []
+        for ev in submitted:
+            assert ev.task_id is not None
+            rt = ev.data.get("release_time")
+            if rt is None:
+                rt = ev.time - t0 if ev.time > first_exec else 0.0
+            task = Task(type_name=ev.type_name or "task",
+                        cost=ev.cost if ev.cost is not None else 1.0,
+                        service_time=elapsed[ev.task_id])
+            by_old_id[ev.task_id] = task
+            release.append(rt)
+        # Dependencies/parents are wired in a second pass: open-mode
+        # submission order is not topological (a dependent can be
+        # submitted before its dependency), so resolving inline would
+        # silently drop edges the live run honored.
+        for ev in submitted:
+            task = by_old_id[ev.task_id]
+            unknown = [d for d in ev.data.get("deps", ())
+                       if d not in by_old_id]
+            parent_id = ev.data.get("parent")
+            if parent_id is not None and parent_id not in by_old_id:
+                unknown.append(parent_id)   # fail fast like missing deps:
+                #                             a dropped parent silently
+                #                             skews the monitor's
+                #                             parent-child subtraction
+            if unknown:
+                raise ValueError(
+                    f"trace is not replayable: task {ev.task_id} depends "
+                    f"on unrecorded task(s) {unknown[:5]}")
+            task.deps = [by_old_id[d] for d in ev.data.get("deps", ())]
+            task.parent = (by_old_id[parent_id] if parent_id is not None
+                           else None)
+            graph.add(task)
+        if all(rt <= 0.0 for rt in release):
+            return graph, None
+        for task, rt in zip(graph.tasks, release):
+            task.release_time = rt
+        # The graph's per-task ``release_time`` is authoritative for
+        # replay (and is what replay() uses); the returned FixedTimeline
+        # is the canonical sorted sequence of arrival *instants* — do
+        # not re-assign() it onto the graph if submission order was not
+        # already release-ordered.
+        return graph, FixedTimeline(tuple(sorted(release)))
+
+    # -- one-call what-if --------------------------------------------------
+
+    def replay(self, spec: GovernorSpec,
+               machine: MachineModel | None = None,
+               bus=None) -> GovernorReport:
+        """Replay the trace in the simulator under ``spec``.
+
+        Default machine: a neutral model with ``spec.resources`` cores.
+        Pass ``bus`` (an :class:`~repro.core.events.EventBus`) to observe
+        or re-record the replay.
+        """
+        from ..runtime.sim import SimCluster, SimJobSpec
+
+        if machine is None:
+            # Neutral by construction: recorded service times are
+            # end-to-end measurements, so neither core scaling nor
+            # monitoring overhead may be charged a second time.
+            machine = MachineModel(name="replay", n_cores=spec.resources,
+                                   core_speed=1.0,
+                                   monitor_event_overhead=0.0)
+        graph, _ = self.build()
+        cluster = SimCluster(machine)
+        job = SimJobSpec(name="replay", graph=graph, governor=spec,
+                         cpus=list(range(spec.resources)), bus=bus)
+        cluster.add_job(job)
+        return cluster.run()["replay"]

@@ -15,7 +15,7 @@ loss continuity across a failure.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from ..core.governor import GovernorSpec, ResourceGovernor
 from ..core.prediction import PredictionConfig

@@ -11,13 +11,12 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..data import SyntheticLM
 from ..models import ModelConfig, Rules, init_params
 from ..optim import AdamWConfig, adamw_init
-from .compression import compress_grads, init_error_feedback
+from .compression import init_error_feedback
 from .steps import StepConfig, make_train_step
 from .straggler import StragglerMonitor
 

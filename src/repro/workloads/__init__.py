@@ -12,6 +12,8 @@ carry a *cost clause* value (the paper's normalization input), a virtual
 for the threaded executor.
 """
 
+from .arrivals import (ArrivalProcess, BurstArrivals, DiurnalArrivals,
+                       FixedTimeline, PoissonArrivals, assign_release_times)
 from .cholesky import build_cholesky
 from .hpccg import build_hpccg
 from .gauss_seidel import build_gauss_seidel
@@ -29,4 +31,6 @@ WORKLOADS = {
 }
 
 __all__ = ["build_cholesky", "build_hpccg", "build_gauss_seidel",
-           "build_multisaxpy", "build_stream", "WORKLOADS"]
+           "build_multisaxpy", "build_stream", "WORKLOADS",
+           "ArrivalProcess", "BurstArrivals", "DiurnalArrivals",
+           "FixedTimeline", "PoissonArrivals", "assign_release_times"]

@@ -1,0 +1,66 @@
+"""Arrival processes: determinism, shapes, assignment."""
+
+import pytest
+
+from repro.runtime import Task, TaskGraph
+from repro.workloads import (BurstArrivals, DiurnalArrivals, FixedTimeline,
+                             PoissonArrivals, assign_release_times)
+
+
+def assert_sorted(ts):
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+class TestProcesses:
+    def test_poisson_seeded_and_reusable(self):
+        p = PoissonArrivals(rate=100.0, seed=7)
+        assert p.times(50) == p.times(50)       # same object, same times
+        assert p.times(50) != PoissonArrivals(rate=100.0, seed=8).times(50)
+        assert_sorted(p.times(50))
+        assert all(t > 0 for t in p.times(50))
+
+    def test_poisson_mean_rate(self):
+        ts = PoissonArrivals(rate=1000.0, seed=0).times(2000)
+        assert ts[-1] == pytest.approx(2.0, rel=0.15)   # n/rate seconds
+
+    def test_burst_shape(self):
+        b = BurstArrivals(burst_size=4, gap=1.0, spacing=0.0)
+        ts = b.times(10)
+        assert ts[:4] == [0.0] * 4              # first burst together
+        assert ts[4:8] == [1.0] * 4             # next after the gap
+        assert ts[8:] == [2.0] * 2
+        assert b.times(10) == ts                # deterministic
+
+    def test_burst_jitter_seeded(self):
+        b = BurstArrivals(burst_size=2, gap=1.0, jitter=0.5, seed=3)
+        assert b.times(20) == b.times(20)
+        assert_sorted(b.times(20))
+
+    def test_diurnal_rate_envelope_and_determinism(self):
+        d = DiurnalArrivals(period=10.0, low_rate=1.0, high_rate=50.0,
+                            seed=1)
+        assert d.times(100) == d.times(100)
+        assert_sorted(d.times(100))
+        assert d.rate_at(0.0) == pytest.approx(1.0)          # trough
+        assert d.rate_at(5.0) == pytest.approx(50.0)         # peak
+
+    def test_fixed_timeline_pads_and_validates(self):
+        f = FixedTimeline((0.0, 1.0, 2.0))
+        assert f.times(5) == [0.0, 1.0, 2.0, 2.0, 2.0]
+        assert f.times(2) == [0.0, 1.0]
+        assert FixedTimeline(()).times(3) == [0.0, 0.0, 0.0]
+        with pytest.raises(ValueError):
+            FixedTimeline((1.0, 0.5))
+
+
+class TestAssignment:
+    def test_assign_release_times_stamps_tasks(self):
+        g = TaskGraph()
+        for _ in range(5):
+            g.add(Task("w", service_time=1e-5))
+        ts = assign_release_times(g, BurstArrivals(burst_size=2, gap=0.5))
+        assert [t.release_time for t in g.tasks] == ts
+        assert_sorted(ts)
+        # None clears back to a closed graph
+        assign_release_times(g, None)
+        assert all(t.release_time is None for t in g.tasks)

@@ -1,0 +1,114 @@
+"""Event bus: pub/sub semantics, serialization, monitor-as-subscriber."""
+
+import pytest
+
+from repro.core import EventBus, EventKind, RuntimeEvent, TaskMonitor
+from repro.runtime import Scheduler, Task
+
+
+def ev(kind, **kw):
+    kw.setdefault("time", 0.0)
+    return RuntimeEvent(kind=kind, **kw)
+
+
+class TestEventBus:
+    def test_publish_reaches_subscriber(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(got.append)
+        e = ev(EventKind.TASK_READY, task_id=1, type_name="t", cost=1.0)
+        bus.publish(e)
+        assert got == [e]
+
+    def test_kind_filter(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(got.append, kinds=[EventKind.PREDICTION])
+        bus.publish(ev(EventKind.TASK_READY, task_id=1, type_name="t",
+                       cost=1.0))
+        bus.publish(ev(EventKind.PREDICTION, data={"delta": 3}))
+        assert [e.kind for e in got] == [EventKind.PREDICTION]
+
+    def test_unsubscribe(self):
+        bus = EventBus()
+        got = []
+        h = bus.subscribe(got.append)
+        bus.publish(ev(EventKind.PREDICTION))
+        bus.unsubscribe(h)
+        bus.publish(ev(EventKind.PREDICTION))
+        assert len(got) == 1
+        assert bus.n_subscribers == 0
+
+    def test_subscription_order_preserved(self):
+        bus = EventBus()
+        order = []
+        bus.subscribe(lambda e: order.append("a"))
+        bus.subscribe(lambda e: order.append("b"))
+        bus.publish(ev(EventKind.PREDICTION))
+        assert order == ["a", "b"]
+
+    def test_event_dict_round_trip(self):
+        e = ev(EventKind.TASK_COMPLETED, time=1.5, task_id=7,
+               type_name="x", cost=2.0, worker_id=3, elapsed=0.25,
+               data={"parent": None, "deps": [1, 2]})
+        e2 = RuntimeEvent.from_dict(e.to_dict())
+        assert e2.kind is EventKind.TASK_COMPLETED
+        assert e2.task_id == 7 and e2.elapsed == 0.25
+        assert list(e2.data["deps"]) == [1, 2]
+
+
+class TestMonitorSubscriber:
+    """The TaskMonitor observes the scheduler through the bus only."""
+
+    def test_scheduler_publishes_monitor_aggregates(self):
+        mon = TaskMonitor()
+        sched = Scheduler(mon)
+        a = Task("a", cost=2.0)
+        b = Task("b", cost=1.0).depends_on(a)
+        sched.submit(a)
+        sched.submit(b)
+        assert mon.live_instances() == 1          # only `a` is ready
+        t = sched.poll(worker_id=0)
+        assert t is a
+        sched.complete(a, elapsed=0.1, worker_id=0)
+        assert mon.completed_instances() == 1
+        assert mon.live_instances() == 1          # b became ready
+        assert mon.unitary_cost("a") == pytest.approx(0.05)
+
+    def test_external_bus_shared_with_other_subscribers(self):
+        bus = EventBus()
+        mon = TaskMonitor()
+        seen = []
+        bus.subscribe(seen.append)
+        sched = Scheduler(mon, bus=bus)
+        sched.submit(Task("a", cost=1.0))
+        kinds = [e.kind for e in seen]
+        assert kinds == [EventKind.TASK_SUBMITTED, EventKind.TASK_READY]
+        assert mon.live_instances() == 1
+
+    def test_monitor_subscribe_idempotent_per_bus(self):
+        bus = EventBus()
+        mon = TaskMonitor()
+        mon.subscribe(bus)
+        mon.subscribe(bus)                    # no double counting
+        sched = Scheduler(mon, bus=bus)       # wires the same pair again
+        sched.submit(Task("a", cost=1.0))
+        assert mon.live_instances() == 1
+        bus2 = EventBus()
+        mon.subscribe(bus2)                   # distinct bus still works
+        bus2.publish(RuntimeEvent(kind=EventKind.TASK_READY, time=0.0,
+                                  task_id=99, type_name="b", cost=1.0))
+        assert mon.live_instances() == 2
+
+    def test_submitted_event_carries_deps_and_release(self):
+        bus = EventBus()
+        seen = []
+        bus.subscribe(seen.append, kinds=[EventKind.TASK_SUBMITTED])
+        sched = Scheduler(bus=bus)
+        a = Task("a")
+        b = Task("b", release_time=1.5).depends_on(a)
+        sched.submit(a)
+        sched.submit(b)
+        assert seen[0].data["deps"] == []
+        assert seen[1].data["deps"] == [a.task_id]
+        assert seen[1].data["release_time"] == 1.5

@@ -1,12 +1,15 @@
 """Executors: threaded correctness + simulator determinism & ordering."""
 
 import random
+import threading
+import time
 
 import pytest
 
 from repro.core import ResourceBroker
 from repro.runtime import (KNL, MN4, SimCluster, SimExecutor, SimJobSpec,
                            Task, TaskGraph, ThreadExecutor)
+from repro.workloads import BurstArrivals, FixedTimeline, PoissonArrivals
 
 
 def chain_graph(n=20, service=1e-5):
@@ -62,6 +65,66 @@ class TestThreadExecutor:
         rep = ThreadExecutor(8, policy="busy").run(g)
         assert sorted(done) == list(range(100))
         assert rep.makespan > 0
+
+    @pytest.mark.parametrize("policy", ["busy", "idle"])
+    def test_empty_graph_terminates(self, policy):
+        """Regression: run(TaskGraph()) used to hang forever — shutdown
+        was only triggered from the task-completion path."""
+        result = {}
+
+        def target():
+            result["report"] = ThreadExecutor(2, policy=policy).run(
+                TaskGraph())
+
+        t = threading.Thread(target=target, daemon=True)
+        t.start()
+        t.join(timeout=10.0)
+        assert not t.is_alive(), "empty-graph run() hung"
+        assert result["report"].makespan == 0.0
+        assert result["report"].tasks_completed == 0
+
+
+class TestThreadExecutorOpen:
+    def test_incremental_submit_and_close(self):
+        ex = ThreadExecutor(3, policy="idle").start()
+        done = []
+        for i in range(4):
+            ex.submit(Task("w", fn=lambda i=i: done.append(i)))
+            time.sleep(0.005)           # empty phases between arrivals
+        ex.submit([Task("w", fn=lambda: done.append(4)),
+                   Task("w", fn=lambda: done.append(5))])
+        rep = ex.close()
+        assert sorted(done) == list(range(6))
+        assert rep.makespan > 0
+
+    def test_run_with_arrivals(self):
+        g = TaskGraph()
+        out = []
+        for i in range(9):
+            g.add(Task("w", cost=1.0, fn=lambda i=i: out.append(i)))
+        rep = ThreadExecutor(2, policy="hybrid").run(
+            g, arrivals=BurstArrivals(burst_size=3, gap=0.01))
+        assert sorted(out) == list(range(9))
+        # the arrival lulls stretch the makespan past two burst gaps
+        assert rep.makespan >= 0.02
+
+    def test_close_without_start_raises(self):
+        with pytest.raises(RuntimeError, match="never started"):
+            ThreadExecutor(2).close()
+
+    def test_energy_epoch_is_start_not_construction(self):
+        """Energy must integrate from start(), not __init__: an executor
+        built ahead of its first submission would otherwise charge the
+        whole construction-to-start gap at full SPIN power."""
+        ex = ThreadExecutor(2, policy="busy")
+        time.sleep(0.25)                  # gap before the run begins
+        ex.start()
+        ex.submit(Task("w", cost=1.0, fn=lambda: None))
+        rep = ex.close()
+        # 2 spinning cores over the run only: energy ≈ 2 × makespan,
+        # nowhere near the 0.5 core-seconds of the pre-start gap
+        assert rep.energy < 0.2
+        assert rep.energy == pytest.approx(2 * rep.makespan, rel=0.5)
 
 
 class TestSimExecutor:
@@ -119,6 +182,78 @@ class TestSimExecutor:
         t_mn4 = SimExecutor(MN4, policy="busy").run(g1).makespan
         t_knl = SimExecutor(KNL, policy="busy").run(g2).makespan
         assert t_knl > t_mn4 * 1.4           # 1/0.62 ≈ 1.61
+
+    def test_reuse_does_not_mutate_spec(self):
+        """Regression: run() used to store the graph on self.spec, so a
+        reused SimExecutor carried state across runs."""
+        ex = SimExecutor(MN4, policy="busy")
+        g1, _ = chain_graph(10)
+        ex.run(g1)
+        assert len(ex.spec.graph) == 0        # per-run spec was a copy
+        assert ex.spec.arrivals is None
+        g2 = TaskGraph()
+        for _ in range(5):
+            g2.add(Task("w", cost=1.0, service_time=1e-5))
+        rep = ex.run(g2, arrivals=FixedTimeline((0.0,) * 5))
+        assert rep.tasks_completed == 5
+        assert ex.spec.arrivals is None       # arrivals did not stick
+
+
+class TestSimOpenWorkloads:
+    def wide(self, n=120, service=1e-4):
+        g = TaskGraph()
+        for _ in range(n):
+            g.add(Task("w", cost=1.0, service_time=service))
+        return g
+
+    @pytest.mark.parametrize("policy", ["busy", "idle", "hybrid",
+                                        "prediction"])
+    def test_burst_arrivals_terminate_and_complete(self, policy):
+        """Termination = arrivals exhausted ∧ drained, through empty
+        phases that leave the cluster fully idle between bursts."""
+        rep = SimExecutor(MN4, policy=policy, monitoring=True).run(
+            self.wide(), arrivals=BurstArrivals(burst_size=30, gap=0.05))
+        assert rep.tasks_completed == 120
+        # three full 50 ms lulls dominate the makespan
+        assert rep.makespan >= 0.15
+
+    def test_poisson_determinism(self):
+        runs = [SimExecutor(MN4, policy="prediction", monitoring=True).run(
+                    self.wide(), arrivals=PoissonArrivals(rate=2000.0,
+                                                          seed=3))
+                for _ in (0, 1)]
+        assert runs[0].makespan == runs[1].makespan
+        assert runs[0].energy == runs[1].energy
+        assert runs[0].resumes == runs[1].resumes
+
+    def test_idle_cheaper_than_busy_through_lulls(self):
+        """The open-workload energy story: busy burns full power through
+        every lull; idle parks and pays only resume overhead."""
+        e = {}
+        for pol in ("busy", "idle"):
+            e[pol] = SimExecutor(MN4, policy=pol).run(
+                self.wide(),
+                arrivals=BurstArrivals(burst_size=30, gap=0.05)).energy
+        assert e["busy"] > 2 * e["idle"]
+
+    def test_release_times_honored(self):
+        g = TaskGraph()
+        for _ in range(4):
+            g.add(Task("w", cost=1.0, service_time=1e-5))
+        for t, rt in zip(g.tasks, (0.0, 0.01, 0.02, 0.03)):
+            t.release_time = rt
+        rep = SimExecutor(MN4, policy="busy").run(g)
+        assert rep.makespan == pytest.approx(0.03 + 1e-5, rel=0.01)
+
+    def test_dependencies_gate_after_release(self):
+        """A dependent task released early still waits for its dep."""
+        g = TaskGraph()
+        a = g.add(Task("a", cost=1.0, service_time=0.02))
+        b = g.add(Task("b", cost=1.0, service_time=1e-5).depends_on(a))
+        a.release_time = None                 # at t=0
+        b.release_time = 1e-3                 # released mid-flight of a
+        rep = SimExecutor(MN4, policy="busy").run(g)
+        assert rep.makespan == pytest.approx(0.02 + 1e-5, rel=0.01)
 
 
 class TestSimDLB:

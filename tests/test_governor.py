@@ -8,7 +8,7 @@ from repro.core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
                                  GovernorSpec, ResourceGovernor,
                                  _REGISTRY, policy_entry, register_policy,
                                  registered_policies)
-from repro.core.policies import BusyPolicy, PollDecision
+from repro.core.policies import BusyPolicy
 from repro.core.prediction import PredictionConfig
 from repro.runtime import (MN4, SimCluster, SimExecutor, SimJobSpec, Task,
                            TaskGraph, ThreadExecutor)

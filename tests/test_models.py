@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, SHAPES, cell_runnable, get_config, \
     get_smoke_config
-from repro.models import (decode_step, forward, init_cache, init_params,
+from repro.models import (decode_step, forward, init_params,
                           lm_loss, prefill)
 
 KEY = jax.random.PRNGKey(0)

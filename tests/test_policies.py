@@ -2,8 +2,7 @@
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core.energy import EnergyMeter
-from repro.core.manager import WorkerManager, WorkerState
+from repro.core.manager import WorkerManager
 from repro.core.monitoring import TaskMonitor
 from repro.core.governor import GovernorSpec, ResourceGovernor, \
     registered_policies

@@ -14,7 +14,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.roofline import analyze_hlo, roofline_terms
@@ -25,7 +24,10 @@ D = 64
 def _flops_of(fn, *args) -> tuple[float, float]:
     compiled = jax.jit(fn).lower(*args).compile()
     a = analyze_hlo(compiled.as_text(), n_devices=1)
-    raw = compiled.cost_analysis().get("flops", 0.0)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):        # older jax returns [dict], newer dict
+        ca = ca[0] if ca else {}
+    raw = ca.get("flops", 0.0)
     return a.flops, raw
 
 
@@ -103,18 +105,20 @@ _COLLECTIVE_PROBE = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.roofline import analyze_hlo
 
-    mesh = jax.make_mesh((8,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((8,), ("d",))
     X = jax.ShapeDtypeStruct((8, 1024), jnp.float32,
                              sharding=NamedSharding(mesh, P("d", None)))
 
     def fn(x):
-        # one full all-reduce of a (1024,) f32 vector over 8 devices
+        # one full all-reduce of a (1024,) f32 vector over 8 devices;
+        # the explicit NamedSharding constraint works with and without
+        # a jax.set_mesh context (jax.sharding.AxisType / jax.set_mesh
+        # do not exist on every supported jax version)
         return jax.lax.with_sharding_constraint(
-            x.sum(axis=0, keepdims=True), P(None, None))
+            x.sum(axis=0, keepdims=True),
+            NamedSharding(mesh, P(None, None)))
 
-    with jax.set_mesh(mesh):
-        compiled = jax.jit(fn).lower(X).compile()
+    compiled = jax.jit(fn).lower(X).compile()
     a = analyze_hlo(compiled.as_text(), n_devices=8)
     # ring all-reduce: 2 * size * (g-1)/g per device
     expect = 2 * 1024 * 4 * 7 / 8

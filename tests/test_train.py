@@ -1,6 +1,5 @@
 """Trainer end-to-end: loss descent, checkpoint/restart continuity."""
 
-import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
