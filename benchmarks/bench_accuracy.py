@@ -15,10 +15,12 @@ from repro.workloads import WORKLOADS
 from .common import PAPER_BENCHES, SCALED, emit
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
-    for machine in (MN4, KNL):
-        for name in PAPER_BENCHES:
+    machines = (MN4,) if smoke else (MN4, KNL)
+    benches = PAPER_BENCHES[:2] if smoke else PAPER_BENCHES
+    for machine in machines:
+        for name in benches:
             g = WORKLOADS[name](seed=0, **SCALED.get(name, {}))
             # Coarse Cholesky: too few instances per type for timing
             # predictions (paper: "NA" — count-based fallback only).

@@ -37,7 +37,7 @@ def _arrival_menu(n_tasks: int, mean_service: float, n_cores: int) -> dict:
     }
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
     machine = MN4
     probe = WORKLOADS[WORKLOAD](seed=0, **SCALED.get(WORKLOAD, {}))
@@ -45,9 +45,12 @@ def run() -> list[dict]:
                 if t.service_time is not None]
     mean_service = sum(services) / max(1, len(services))
     menu = _arrival_menu(len(probe.tasks), mean_service, machine.n_cores)
+    if smoke:
+        menu = {"poisson": menu["poisson"]}
+    policies = ["busy", "prediction"] if smoke else POLICIES
     for arrival_name, process in menu.items():
         reports = {}
-        for policy in POLICIES:
+        for policy in policies:
             g = WORKLOADS[WORKLOAD](seed=0, **SCALED.get(WORKLOAD, {}))
             spec = GovernorSpec(resources=machine.n_cores, policy=policy,
                                 monitoring=True)

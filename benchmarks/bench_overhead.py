@@ -18,10 +18,12 @@ from repro.workloads import WORKLOADS
 from .common import emit
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
-    for name, kw in (("multisaxpy-fine", dict(generations=40)),
-                     ("cholesky-fine", dict(p=20))):
+    pairs = ((("multisaxpy-fine", dict(generations=8)),) if smoke else
+             (("multisaxpy-fine", dict(generations=40)),
+              ("cholesky-fine", dict(p=20))))
+    for name, kw in pairs:
         g1 = WORKLOADS[name](seed=0, **kw)
         g2 = WORKLOADS[name](seed=0, **kw)
         t_off = SimExecutor(MN4, policy="busy",
@@ -38,7 +40,7 @@ def run() -> list[dict]:
 
     # real bookkeeping cost per event (monitoring-only governor stack)
     m = ResourceGovernor(GovernorSpec(resources=1, monitoring=True)).monitor
-    n = 200_000
+    n = 20_000 if smoke else 200_000
     t0 = time.perf_counter()
     for i in range(n):
         m.on_task_ready(i, "t", 1.0)

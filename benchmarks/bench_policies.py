@@ -12,12 +12,15 @@ from .common import PAPER_BENCHES, SCALED, emit
 POLICIES = ["busy", "idle", "hybrid", "prediction"]
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
-    for machine in (MN4, KNL):
-        for name in PAPER_BENCHES:
+    machines = (MN4,) if smoke else (MN4, KNL)
+    benches = ["multisaxpy-fine"] if smoke else PAPER_BENCHES
+    policies = ["busy", "prediction"] if smoke else POLICIES
+    for machine in machines:
+        for name in benches:
             reports = {}
-            for policy in POLICIES:
+            for policy in policies:
                 g = WORKLOADS[name](seed=0, **SCALED.get(name, {}))
                 spec = GovernorSpec(resources=machine.n_cores,
                                     policy=policy, monitoring=True)

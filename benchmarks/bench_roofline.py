@@ -17,7 +17,8 @@ from .common import emit
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    # reads precomputed artifacts — already seconds-scale, smoke == full
     rows = []
     files = sorted(ART.glob("*.json")) if ART.exists() else []
     if not files:

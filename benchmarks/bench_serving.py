@@ -20,23 +20,25 @@ from repro.serving import AutoScaler, Request, ServingEngine
 from .common import emit
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
     rows = []
     cfg = get_smoke_config("llama3.2-1b")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     # bursty trace: 3 bursts of 6 requests with idle gaps (in ticks)
-    bursts = {0: 6, 40: 6, 80: 6}
+    bursts = {0: 2} if smoke else {0: 6, 40: 6, 80: 6}
+    policies = ("prediction",) if smoke else ("busy", "idle", "prediction")
 
-    for policy in ("busy", "idle", "prediction"):
+    for policy in policies:
         engine = ServingEngine(cfg, params, max_batch=4, max_len=96)
         scaler = AutoScaler(engine.monitor, max_replicas=4, policy=policy,
                             bus=engine.bus)
         reqs = []
         replica_ticks = 0
         tick = 0
+        max_ticks, min_ticks = (60, 30) if smoke else (200, 100)
         t0 = time.perf_counter()
-        while tick < 200 and (tick < 100 or engine.load):
+        while tick < max_ticks and (tick < min_ticks or engine.load):
             for _ in range(bursts.get(tick, 0)):
                 p = rng.integers(0, cfg.vocab, size=8).tolist()
                 reqs.append(engine.submit(

@@ -27,35 +27,43 @@ def _emit(rows, config, name, rep, calls):
     emit(rows[-1])
 
 
-def run() -> list[dict]:
+SMOKE_GS_KW = dict(steps=6, bi=6, bj=6, block_elems=300_000, seed=0)
+SMOKE_ST_KW = dict(rounds=5, blocks=200, seed=1)
+
+
+def run(smoke: bool = False) -> list[dict]:
     rows = []
+    gs_kw = SMOKE_GS_KW if smoke else GS_KW
+    st_kw = SMOKE_ST_KW if smoke else ST_KW
     # Single: each app alone on half the node, idle policy (paper: the
     # Single policy idles CPUs when unused).
-    for name, graph in (("gauss", build_gauss_seidel(**GS_KW)),
-                        ("stream", build_stream(**ST_KW))):
+    for name, graph in (("gauss", build_gauss_seidel(**gs_kw)),
+                        ("stream", build_stream(**st_kw))):
         rep = SimExecutor(MN4, policy="idle", n_cpus=24,
                           monitoring=True).run(graph)
         _emit(rows, "single", name, rep, 0)
 
     # Concurrent without DLB: both apps pinned to their half, busy.
     cl = SimCluster(MN4)
-    cl.add_job(SimJobSpec(name="gauss", graph=build_gauss_seidel(**GS_KW),
+    cl.add_job(SimJobSpec(name="gauss", graph=build_gauss_seidel(**gs_kw),
                           policy="busy", cpus=list(range(24))))
-    cl.add_job(SimJobSpec(name="stream", graph=build_stream(**ST_KW),
+    cl.add_job(SimJobSpec(name="stream", graph=build_stream(**st_kw),
                           policy="busy", cpus=list(range(24, 48))))
     for name, rep in cl.run().items():
         _emit(rows, "concurrent", name, rep, 0)
 
     # Concurrent + DLB variants.
-    for policy, label in (("dlb-lewi", "dlb_lewi"),
-                          ("dlb-hybrid", "dlb_hybrid"),
-                          ("dlb-prediction", "dlb_prediction")):
+    variants = ((("dlb-prediction", "dlb_prediction"),) if smoke else
+                (("dlb-lewi", "dlb_lewi"),
+                 ("dlb-hybrid", "dlb_hybrid"),
+                 ("dlb-prediction", "dlb_prediction")))
+    for policy, label in variants:
         broker = ResourceBroker()
         cl = SimCluster(MN4, broker=broker)
         cl.add_job(SimJobSpec(name="gauss",
-                              graph=build_gauss_seidel(**GS_KW),
+                              graph=build_gauss_seidel(**gs_kw),
                               policy=policy, cpus=list(range(24))))
-        cl.add_job(SimJobSpec(name="stream", graph=build_stream(**ST_KW),
+        cl.add_job(SimJobSpec(name="stream", graph=build_stream(**st_kw),
                               policy=policy, cpus=list(range(24, 48))))
         reps = cl.run()
         for name, rep in reps.items():

@@ -1,12 +1,18 @@
 """Benchmark driver — one section per paper table/figure plus the
-beyond-paper serving, roofline and open-workload benchmarks.
+beyond-paper serving, roofline, open-workload and heterogeneous
+benchmarks.
 
     PYTHONPATH=src python -m benchmarks.run [--only accuracy,...]
-                                            [--json-dir DIR]
+                                            [--json-dir DIR] [--smoke]
 
 Sections whose ``run()`` returns rows also write a machine-readable
 ``BENCH_<section>.json`` (``--json-dir``, default cwd) so the perf
 trajectory is tracked across PRs.
+
+``--smoke`` runs every section in a seconds-scale configuration — CI
+exercises all BENCH-emitting code paths on each push so the drivers
+cannot silently rot.  Smoke rows are *not* written over the committed
+BENCH files unless ``--json-dir`` is given explicitly.
 """
 
 from __future__ import annotations
@@ -17,7 +23,7 @@ import time
 from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
-            "roofline", "open_workloads"]
+            "roofline", "open_workloads", "heterogeneous"]
 
 CAPTIONS = {
     "accuracy": "(paper Table 2)",
@@ -25,6 +31,7 @@ CAPTIONS = {
     "sharing": "(paper Table 3)",
     "overhead": "(paper §5)",
     "open_workloads": "(beyond-paper: arrival-driven load)",
+    "heterogeneous": "(beyond-paper: asymmetric cores + DVFS)",
 }
 
 
@@ -33,24 +40,32 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                     + ",".join(SECTIONS))
-    ap.add_argument("--json-dir", default=".",
-                    help="where BENCH_<section>.json files are written")
+    ap.add_argument("--json-dir", default=None,
+                    help="where BENCH_<section>.json files are written "
+                    "(default: cwd; in --smoke mode JSON is skipped "
+                    "unless this is given)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run of every section (CI)")
     args = ap.parse_args()
     wanted = args.only.split(",") if args.only else SECTIONS
-    json_dir = Path(args.json_dir)
-    json_dir.mkdir(parents=True, exist_ok=True)
+    write_json = args.json_dir is not None or not args.smoke
+    json_dir = Path(args.json_dir) if args.json_dir is not None \
+        else Path(".")
+    if write_json:
+        json_dir.mkdir(parents=True, exist_ok=True)
 
     for name in wanted:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
-        print(f"### bench_{name} {CAPTIONS.get(name, '')}")
+        print(f"### bench_{name} {CAPTIONS.get(name, '')}"
+              + (" [smoke]" if args.smoke else ""))
         t0 = time.time()
-        rows = mod.run()
+        rows = mod.run(smoke=args.smoke)
         elapsed = time.time() - t0
-        if isinstance(rows, list) and rows:
+        if write_json and isinstance(rows, list) and rows:
             out = json_dir / f"BENCH_{name}.json"
             out.write_text(json.dumps(
                 {"section": name, "elapsed_s": round(elapsed, 2),
-                 "rows": rows}, indent=1))
+                 "smoke": args.smoke, "rows": rows}, indent=1))
             print(f"### wrote {out}")
         print(f"### bench_{name} done in {elapsed:.1f}s\n")
 

@@ -14,13 +14,15 @@ from .governor import (DEFAULT_MIN_SAMPLES, GovernorReport, GovernorSpec,
                        PolicyEntry, ResourceGovernor, policy_entry,
                        register_policy, registered_policies)
 from .manager import WorkerManager, WorkerState
-from .monitoring import EMA, AccuracyReport, TaskMonitor, TypeMetrics
-from .policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
-                       PollDecision, PredictionPolicy)
+from .monitoring import (EMA, AccuracyReport, HeteroTypeSnapshot,
+                         TaskMonitor, TypeMetrics)
+from .policies import (BusyPolicy, HeteroPredictionPolicy, HybridPolicy,
+                       IdlePolicy, Policy, PollDecision, PredictionPolicy)
 from .prediction import (DEFAULT_PREDICTION_RATE_S, CPUPredictor,
-                         PredictionConfig)
+                         HeteroPlan, PredictionConfig)
 from .sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
                       ResourceBroker, SharingPolicy)
+from .topology import CoreTopology, CoreType
 
 __all__ = [
     "CostClause", "TaskTypeInfo", "TaskTypeRegistry",
@@ -30,10 +32,13 @@ __all__ = [
     "ResourceGovernor", "policy_entry", "register_policy",
     "registered_policies",
     "WorkerManager", "WorkerState",
-    "EMA", "AccuracyReport", "TaskMonitor", "TypeMetrics",
-    "BusyPolicy", "HybridPolicy", "IdlePolicy", "Policy", "PollDecision",
-    "PredictionPolicy",
-    "DEFAULT_PREDICTION_RATE_S", "CPUPredictor", "PredictionConfig",
+    "EMA", "AccuracyReport", "HeteroTypeSnapshot", "TaskMonitor",
+    "TypeMetrics",
+    "BusyPolicy", "HeteroPredictionPolicy", "HybridPolicy", "IdlePolicy",
+    "Policy", "PollDecision", "PredictionPolicy",
+    "DEFAULT_PREDICTION_RATE_S", "CPUPredictor", "HeteroPlan",
+    "PredictionConfig",
     "DLBHybridPolicy", "DLBPredictionPolicy", "LeWIPolicy",
     "ResourceBroker", "SharingPolicy",
+    "CoreTopology", "CoreType",
 ]

@@ -1,7 +1,7 @@
 """Energy accounting (EDP) — the container has no RAPL, so energy is a
 documented *proxy model* integrated over (virtual or wall) time:
 
-    E = Σ_cores ∫ P(state(t)) dt
+    E = Σ_cores ∫ P(state(t), freq(t)) dt
 
 with normalized powers ``P_active = P_spin = 1.0`` (busy-waiting burns the
 same cycles as computing — the very premise of the paper's energy argument),
@@ -9,6 +9,17 @@ same cycles as computing — the very premise of the paper's energy argument),
 borrower accounts for it).  EDP = E · elapsed, matching the paper's
 "energy-delay product correlates both performance and energy consumption
 in only one value".
+
+Heterogeneous extensions: each core may carry its *own* power model (an
+E-core draws less than a P-core in every state) and a DVFS frequency
+step.  Dynamic power scales cubically with the step (P ∝ V²f with
+V ∝ f — the classic first-order DVFS model); the idle floor plays the
+static/leakage component, so
+
+    P(state, q) = P_idle + (P(state) − P_idle) · q³     for active/spin
+
+and idle/off power does not scale.  At ``q = 1`` this is exactly the
+flat model, so homogeneous stacks are bit-for-bit unchanged.
 
 The proxy preserves the paper's *ordering* of policies by construction:
 busy maximizes active core-seconds, idle minimizes them at the price of
@@ -40,54 +51,102 @@ class PowerModel:
     #: energy spike charged per idle→active resume (wakeup cost)
     resume_energy: float = 0.0
 
-    def power(self, state: CoreState) -> float:
-        return {
+    def power(self, state: CoreState, freq: float = 1.0) -> float:
+        base = {
             CoreState.ACTIVE: self.active,
             CoreState.SPIN: self.spin,
             CoreState.IDLE: self.idle,
             CoreState.OFF: self.off,
         }[state]
+        if freq != 1.0 and state in (CoreState.ACTIVE, CoreState.SPIN):
+            # cubic dynamic component over the static (idle) floor
+            return self.idle + (base - self.idle) * freq ** 3
+        return base
 
 
 @dataclass
 class _CoreTimeline:
     state: CoreState
     since: float
+    power: PowerModel
+    core_type: str = ""
+    freq: float = 1.0
+    joules: float = 0.0
     accum: dict[CoreState, float] = field(
         default_factory=lambda: {s: 0.0 for s in CoreState})
     resumes: int = 0
 
+    def close_segment(self, now: float) -> None:
+        dt = max(0.0, now - self.since)
+        if dt:
+            self.accum[self.state] += dt
+            self.joules += dt * self.power.power(self.state, self.freq)
+        self.since = now
+
 
 class EnergyMeter:
     """Integrates per-core state durations; time source is supplied by the
-    executor (virtual time in simulation, ``time.perf_counter`` live)."""
+    executor (virtual time in simulation, ``time.perf_counter`` live).
+
+    Cores may carry individual power models and a DVFS frequency step
+    (see :meth:`add_core` / :meth:`set_frequency`); cores added through
+    the constructor use the meter-wide default model at full frequency.
+    """
 
     def __init__(self, n_cores: int, power: PowerModel | None = None,
                  t0: float = 0.0) -> None:
         self.power_model = power or PowerModel()
-        self._cores = {i: _CoreTimeline(CoreState.SPIN, t0)
+        self._cores = {i: _CoreTimeline(CoreState.SPIN, t0,
+                                        power=self.power_model)
                        for i in range(n_cores)}
         self._t0 = t0
         self._t_end: float | None = None
 
-    def add_core(self, core_id: int, state: CoreState, now: float) -> None:
-        self._cores[core_id] = _CoreTimeline(state, now)
+    def add_core(self, core_id: int, state: CoreState, now: float,
+                 power: PowerModel | None = None,
+                 core_type: str = "") -> None:
+        tl = self._cores.get(core_id)
+        if tl is not None:
+            # Re-registration (e.g. the same CPU borrowed again): keep
+            # the accumulated history — overwriting the timeline used to
+            # erase the earlier borrow window's energy.  The DVFS step
+            # resets to full; the owner re-applies its current plan.
+            tl.close_segment(now)
+            tl.state = state
+            tl.freq = 1.0
+            if power is not None:
+                tl.power = power
+            if core_type:
+                tl.core_type = core_type
+            return
+        self._cores[core_id] = _CoreTimeline(
+            state, now, power=power or self.power_model,
+            core_type=core_type)
 
     def set_state(self, core_id: int, state: CoreState, now: float) -> None:
         tl = self._cores[core_id]
         if tl.state is state:
             return
-        tl.accum[tl.state] += max(0.0, now - tl.since)
+        tl.close_segment(now)
         if tl.state is CoreState.IDLE and state in (CoreState.ACTIVE,
                                                     CoreState.SPIN):
             tl.resumes += 1
         tl.state = state
-        tl.since = now
+
+    def set_frequency(self, core_id: int, freq: float, now: float) -> None:
+        """Re-clock a core: the open segment is accounted at the old step."""
+        tl = self._cores[core_id]
+        if tl.freq == freq:
+            return
+        tl.close_segment(now)
+        tl.freq = freq
+
+    def frequency_of(self, core_id: int) -> float:
+        return self._cores[core_id].freq
 
     def finish(self, now: float) -> None:
         for tl in self._cores.values():
-            tl.accum[tl.state] += max(0.0, now - tl.since)
-            tl.since = now
+            tl.close_segment(now)
         self._t_end = now
 
     # -- reports ---------------------------------------------------------
@@ -99,12 +158,31 @@ class EnergyMeter:
                 out[s] += v
         return out
 
+    def state_seconds_by_type(self) -> dict[str, dict[CoreState, float]]:
+        """Per-core-type state seconds (empty for untyped/homogeneous
+        meters — cores added without a ``core_type`` label)."""
+        out: dict[str, dict[CoreState, float]] = {}
+        for tl in self._cores.values():
+            if not tl.core_type:
+                continue
+            acc = out.setdefault(tl.core_type,
+                                 {s: 0.0 for s in CoreState})
+            for s, v in tl.accum.items():
+                acc[s] += v
+        return out
+
+    def energy_by_type(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for tl in self._cores.values():
+            if not tl.core_type:
+                continue
+            out[tl.core_type] = (out.get(tl.core_type, 0.0) + tl.joules
+                                 + tl.power.resume_energy * tl.resumes)
+        return out
+
     def energy(self) -> float:
-        pm = self.power_model
-        acc = self.state_seconds()
-        e = sum(acc[s] * pm.power(s) for s in CoreState)
-        e += pm.resume_energy * sum(tl.resumes for tl in self._cores.values())
-        return e
+        return sum(tl.joules + tl.power.resume_energy * tl.resumes
+                   for tl in self._cores.values())
 
     def elapsed(self) -> float:
         if self._t_end is None:

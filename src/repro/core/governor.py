@@ -41,10 +41,11 @@ from .energy import CoreState, EnergyMeter, PowerModel
 from .events import EventBus, EventKind, RuntimeEvent
 from .manager import WorkerManager
 from .monitoring import DEFAULT_MIN_SAMPLES, AccuracyReport, TaskMonitor
-from .policies import (BusyPolicy, HybridPolicy, IdlePolicy, Policy,
-                       PollDecision, PredictionPolicy)
+from .policies import (BusyPolicy, HeteroPredictionPolicy, HybridPolicy,
+                       IdlePolicy, Policy, PollDecision, PredictionPolicy)
 from .prediction import CPUPredictor, PredictionConfig
 from .sharing import DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy
+from .topology import CoreTopology, CoreType
 
 __all__ = [
     "GovernorSpec",
@@ -74,13 +75,16 @@ class PolicyEntry:
     #: DLB-style resource sharing: empty polls may LEND the CPU away and
     #: the predictor runs with oversubscription allowed (paper §3.3)
     sharing: bool = False
+    #: the policy plans per core type: the governor synthesizes a
+    #: single-type :class:`CoreTopology` when the spec carries none
+    needs_topology: bool = False
 
 
 _REGISTRY: dict[str, PolicyEntry] = {}
 
 
 def register_policy(name: str, *, needs_predictor: bool = False,
-                    sharing: bool = False):
+                    sharing: bool = False, needs_topology: bool = False):
     """Decorator registering ``factory(spec, predictor) -> Policy``.
 
     Downstream code adds policies without touching core::
@@ -92,7 +96,8 @@ def register_policy(name: str, *, needs_predictor: bool = False,
     def deco(factory):
         _REGISTRY[name] = PolicyEntry(name=name, factory=factory,
                                       needs_predictor=needs_predictor,
-                                      sharing=sharing)
+                                      sharing=sharing,
+                                      needs_topology=needs_topology)
         return factory
     return deco
 
@@ -134,6 +139,14 @@ def _prediction(spec: "GovernorSpec",
                 predictor: CPUPredictor | None) -> Policy:
     assert predictor is not None
     return PredictionPolicy(predictor)
+
+
+@register_policy("hetero-prediction", needs_predictor=True,
+                 needs_topology=True)
+def _hetero_prediction(spec: "GovernorSpec",
+                       predictor: CPUPredictor | None) -> Policy:
+    assert predictor is not None
+    return HeteroPredictionPolicy(predictor)
 
 
 @register_policy("dlb-lewi", sharing=True)
@@ -189,6 +202,14 @@ class GovernorSpec:
     power: PowerModel | None = None
     #: floor for ``target()`` while load is present (autoscaler/elastic)
     min_resources: int = 0
+    #: heterogeneous-core description; None ⇒ homogeneous resources
+    #: (the sim injects the machine's topology for asymmetric presets)
+    topology: CoreTopology | None = None
+    #: which core types are trimmed first when Δ drops — "slow-first"
+    #: parks the slowest types first (matches the predictor filling the
+    #: fastest cores first); "fast-first" parks the fast cores first
+    #: ("park the P-cores last" vs "park the E-cores last")
+    park_order: str = "slow-first"
     #: extra kwargs for custom registered policy factories
     policy_params: Mapping[str, Any] = field(default_factory=dict)
 
@@ -199,6 +220,15 @@ class GovernorSpec:
             raise ValueError("spin_budget must be >= 1")
         if not 0 <= self.min_resources <= self.resources:
             raise ValueError("min_resources must be in [0, resources]")
+        if self.park_order not in ("slow-first", "fast-first"):
+            raise ValueError(
+                f"park_order must be 'slow-first' or 'fast-first', "
+                f"got {self.park_order!r}")
+        if (self.topology is not None
+                and self.topology.n_cores != self.resources):
+            raise ValueError(
+                f"topology has {self.topology.n_cores} cores, "
+                f"but resources is {self.resources}")
 
     # -- serialization (configs / CLI round-trip) ---------------------------
 
@@ -207,6 +237,10 @@ class GovernorSpec:
         d["policy_params"] = dict(self.policy_params)
         if self.power is None:
             d.pop("power")
+        if self.topology is None:
+            d.pop("topology")
+        else:
+            d["topology"] = self.topology.to_dict()
         return d
 
     @classmethod
@@ -216,6 +250,8 @@ class GovernorSpec:
             d["prediction"] = PredictionConfig(**d["prediction"])
         if isinstance(d.get("power"), Mapping):
             d["power"] = PowerModel(**d["power"])
+        if isinstance(d.get("topology"), Mapping):
+            d["topology"] = CoreTopology.from_dict(d["topology"])
         return cls(**d)
 
 
@@ -245,6 +281,11 @@ class GovernorReport:
     state_seconds: dict[str, float] = field(default_factory=dict)
     dlb_calls: int = 0
     monitor_events: int = 0
+    #: per-core-type state seconds ({} on homogeneous stacks)
+    state_seconds_by_type: dict[str, dict[str, float]] = field(
+        default_factory=dict)
+    #: last recommended DVFS step per core type ({} without predictions)
+    freq_by_type: dict[str, float] = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +334,15 @@ class ResourceGovernor:
         self.sharing = entry.sharing
         self.bus = bus
         self._clock = clock
+        self.topology: CoreTopology | None = spec.topology
+        # Synthesized topologies (hetero policies on a flat resource
+        # pool) reduce to the homogeneous algorithms and must not leak
+        # a made-up type name into per-type reports; explicit ones do
+        # report, even single-type (e.g. a job sliced to the E-cores).
+        self._topology_synthesized = (spec.topology is None
+                                      and entry.needs_topology)
+        if self.topology is None and entry.needs_topology:
+            self.topology = CoreTopology.homogeneous(spec.resources)
         needs_monitor = entry.needs_predictor or bool(spec.monitoring)
         if monitor is not None:
             self.monitor: TaskMonitor | None = monitor
@@ -310,19 +360,88 @@ class ResourceGovernor:
                 # modified to allow a superior number of CPUs"
                 cfg = replace(cfg, allow_oversubscription=True)
             self.predictor = CPUPredictor(self.monitor,
-                                          n_cpus=spec.resources, config=cfg)
+                                          n_cpus=spec.resources, config=cfg,
+                                          topology=self.topology)
         self.policy: Policy = entry.factory(spec, self.predictor)
         self.manager: WorkerManager | None = None
         self.energy: EnergyMeter | None = None
+        self._type_of_worker: dict[int, str] = {}
+        # Last applied type→step map, replaced wholesale at tick time so
+        # the per-task-start frequency_of() read is lock-free.
+        self._freq_cache: dict[str, float] = {}
         if clock is not None:
             ids = (list(worker_ids) if worker_ids is not None
                    else list(range(spec.resources)))
+            topo = self.topology
+            core_type_of = None
+            park_order = None
+            if topo is not None:
+                # positional worker→core-type mapping (the i-th owned
+                # worker runs on the topology's i-th core)
+                self._type_of_worker = {w: topo.type_of(i)
+                                        for i, w in enumerate(ids)}
+                core_type_of = self._core_type_of
+                ordered = sorted(topo.types, key=lambda t: t.speed)
+                if spec.park_order == "fast-first":
+                    ordered = list(reversed(ordered))
+                park_order = [t.name for t in ordered]
+                if self.monitor is not None:
+                    self.monitor.set_core_type_of(self._core_type_of,
+                                                  freq_of=self.frequency_of)
             self.energy = EnergyMeter(0, spec.power, t0=t0)
-            for w in ids:
-                self.energy.add_core(w, CoreState.SPIN, t0)
+            for i, w in enumerate(ids):
+                ct = topo.core_type_at(i) if topo is not None else None
+                self.energy.add_core(
+                    w, CoreState.SPIN, t0,
+                    power=(ct.power if ct is not None and ct.power
+                           is not None else spec.power),
+                    core_type=(ct.name if topo is not None
+                               and not self._topology_synthesized
+                               else ""))
             self.manager = WorkerManager(len(ids), self.policy, clock=clock,
                                          energy=self.energy, worker_ids=ids,
-                                         bus=bus)
+                                         bus=bus,
+                                         core_type_of=core_type_of,
+                                         park_order=park_order)
+            if isinstance(self.policy, HeteroPredictionPolicy):
+                self.policy.bind_topology(
+                    self._core_type_of,
+                    self.manager._active_by_type_locked)
+
+    def _core_type_of(self, worker_id: int) -> str:
+        ct = self._type_of_worker.get(worker_id)
+        if ct is not None:
+            return ct
+        # Last resort for foreign CPUs never announced via
+        # :meth:`adopt_worker`: map positionally through the topology
+        # (global ids wrap per machine; wrong for sliced topologies,
+        # which is why executors should adopt borrowed workers).
+        if self.topology is not None:
+            return self.topology.type_of(worker_id)
+        return ""
+
+    def adopt_worker(self, worker_id: int,
+                     core_type: "CoreType | None" = None) -> None:
+        """Register a foreign (borrowed) CPU with its true identity: the
+        executor knows which physical core arrived, the governor does
+        not.  Feeds the α_{j,c} mapping, per-type energy billing and
+        DVFS-step lookup for the borrowed core."""
+        mgr = self._require_manager()
+        if core_type is None:
+            mgr.add_worker(worker_id)
+            return
+        self._type_of_worker[worker_id] = core_type.name
+        mgr.add_worker(
+            worker_id,
+            power=(core_type.power if core_type.power is not None
+                   else self.spec.power),
+            core_type=(core_type.name
+                       if not self._topology_synthesized else ""))
+        # bill the adopted core at the step its service times will use
+        q = self._freq_cache.get(core_type.name)
+        if q is not None and self.energy is not None \
+                and self._clock is not None:
+            self.energy.set_frequency(worker_id, q, self._clock())
 
     # -- push-style lifecycle (executors: Alg. 2 hooks) ----------------------
 
@@ -362,9 +481,37 @@ class ResourceGovernor:
             # simulator, which only schedules ticks when the policy
             # uses predictions).
             return self.spec.resources
+        self.apply_frequencies()
         delta = self.predictor.delta
         self._publish_prediction(delta)
         return delta
+
+    def apply_frequencies(self) -> dict[str, float]:
+        """Apply the predictor's recommended DVFS step per core type to
+        the energy meter (no-op on homogeneous / clock-less stacks).
+        Returns the applied type→step map."""
+        if (self.predictor is None or self.energy is None
+                or self.topology is None or self._clock is None):
+            return {}
+        freqs = self.predictor.freq_by_type
+        if not freqs:
+            return {}
+        now = self._clock()
+        for w, ct in self._type_of_worker.items():
+            q = freqs.get(ct)
+            if q is not None:
+                self.energy.set_frequency(w, q, now)
+        self._freq_cache = freqs
+        return freqs
+
+    def frequency_of(self, worker_id: int) -> float:
+        """Current DVFS step of ``worker_id`` (1.0 when un-clocked) —
+        the simulator divides service times by this.  Reads the
+        tick-time cache, so the per-task hot path takes no lock."""
+        freqs = self._freq_cache
+        if not freqs:
+            return 1.0
+        return freqs.get(self._core_type_of(worker_id), 1.0)
 
     def _publish_prediction(self, delta: int) -> None:
         if self.bus is None or not self.bus.interested(EventKind.PREDICTION):
@@ -440,4 +587,11 @@ class ResourceGovernor:
                            in energy_meter.state_seconds().items()},
             dlb_calls=dlb_calls,
             monitor_events=monitor_events,
+            state_seconds_by_type={
+                ct: {s.value: v for s, v in acc.items()}
+                for ct, acc in
+                energy_meter.state_seconds_by_type().items()},
+            freq_by_type=(self.predictor.freq_by_type
+                          if self.predictor is not None
+                          and not self._topology_synthesized else {}),
         )

@@ -12,6 +12,13 @@ The manager is deliberately *passive*: it mutates state and reports which
 workers must be resumed/idled, but the executor owns the actual blocking /
 wakeup primitives (condition variables live, event queue simulated).
 
+Heterogeneous machines: the manager may know each worker's core type
+(``core_type_of``) and a **park order** over type names.  Parking-order
+types are trimmed first when Δ drops and woken last when work arrives
+("park the E-cores last" keeps the efficient cores hot; "park the
+P-cores last" keeps the fast ones).  Without a topology both orderings
+are identity, so homogeneous behaviour is unchanged.
+
 All transitions are guarded by one lock; the paper stores ``Δ`` in an atomic
 and updates ``δ`` "in a thread-safe manner" — this lock is that atomicity.
 """
@@ -20,7 +27,7 @@ from __future__ import annotations
 
 import enum
 import threading
-from typing import Callable
+from typing import Callable, Sequence
 
 from .energy import CoreState, EnergyMeter
 from .events import EventBus, EventKind, RuntimeEvent
@@ -51,11 +58,18 @@ class WorkerManager:
                  clock: Callable[[], float],
                  energy: EnergyMeter | None = None,
                  worker_ids: list[int] | None = None,
-                 bus: EventBus | None = None) -> None:
+                 bus: EventBus | None = None,
+                 core_type_of: Callable[[int], str] | None = None,
+                 park_order: Sequence[str] | None = None) -> None:
         self.policy = policy
         self.clock = clock
         self.energy = energy
         self.bus = bus
+        self.core_type_of = core_type_of
+        # Lower rank ⇒ parked earlier and woken later.  Unknown types
+        # rank last (parked last / woken first).
+        self._park_rank = ({name: i for i, name in enumerate(park_order)}
+                           if park_order is not None else {})
         ids = worker_ids if worker_ids is not None else list(range(n_workers))
         self._lock = threading.Lock()
         self._states: dict[int, WorkerState] = {
@@ -82,6 +96,21 @@ class WorkerManager:
         return sum(1 for s in self._states.values()
                    if s in (WorkerState.ACTIVE, WorkerState.SPIN))
 
+    def active_by_type(self) -> dict[str, int]:
+        """δ split per core type ({} without a ``core_type_of``)."""
+        with self._lock:
+            return self._active_by_type_locked()
+
+    def _active_by_type_locked(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        if self.core_type_of is None:
+            return out
+        for w, s in self._states.items():
+            if s in (WorkerState.ACTIVE, WorkerState.SPIN):
+                ct = self.core_type_of(w)
+                out[ct] = out.get(ct, 0) + 1
+        return out
+
     @property
     def idle_workers(self) -> list[int]:
         with self._lock:
@@ -95,6 +124,24 @@ class WorkerManager:
     def states(self) -> dict[int, WorkerState]:
         with self._lock:
             return dict(self._states)
+
+    # -- ordering ------------------------------------------------------------
+
+    def _rank(self, worker_id: int) -> int:
+        if self.core_type_of is None or not self._park_rank:
+            return 0
+        return self._park_rank.get(self.core_type_of(worker_id),
+                                   len(self._park_rank))
+
+    def park_first(self, workers: list[int]) -> list[int]:
+        """``workers`` sorted for trimming: lowest park rank first
+        (stable — identity without a topology)."""
+        return sorted(workers, key=self._rank)
+
+    def wake_first(self, workers: list[int]) -> list[int]:
+        """``workers`` sorted for waking/dispatch: highest park rank
+        first (stable — identity without a topology)."""
+        return sorted(workers, key=lambda w: -self._rank(w))
 
     # -- transitions ---------------------------------------------------------
 
@@ -111,6 +158,19 @@ class WorkerManager:
                 worker_id=worker_id,
                 data={"state": state.value,
                       "prev": prev.value if prev else None}))
+
+    def _apply_poll_decision_locked(self, worker_id: int,
+                                    decision: PollDecision) -> None:
+        """The one IDLE/LEND transition path (poll_empty and
+        reevaluate_spinners used to diverge on spin-count resets and
+        transition counting)."""
+        if decision is PollDecision.IDLE:
+            self._set(worker_id, WorkerState.IDLE)
+            self._spin_counts[worker_id] = 0
+            self.idles += 1
+        elif decision is PollDecision.LEND:
+            self._set(worker_id, WorkerState.LENT)
+            self._spin_counts[worker_id] = 0
 
     def task_started(self, worker_id: int) -> None:
         with self._lock:
@@ -139,24 +199,20 @@ class WorkerManager:
             decision = self.policy.on_poll_empty(
                 worker_id, self._active_locked(),
                 self._spin_counts[worker_id])
-            if decision is PollDecision.IDLE:
-                self._set(worker_id, WorkerState.IDLE)
-                self._spin_counts[worker_id] = 0
-                self.idles += 1
-            elif decision is PollDecision.LEND:
-                self._set(worker_id, WorkerState.LENT)
-                self._spin_counts[worker_id] = 0
+            self._apply_poll_decision_locked(worker_id, decision)
             return decision
 
     def notify_added(self, ready_tasks: int) -> list[int]:
         """Tasks were added — Alg. 2 lines 11–19.
 
         Returns the worker ids transitioned IDLE → SPIN; the executor must
-        actually wake them (condition variable / sim event).
+        actually wake them (condition variable / sim event).  On
+        heterogeneous machines the wake order follows the park order in
+        reverse (fastest-to-park woken last).
         """
         with self._lock:
-            idle = [w for w, s in self._states.items()
-                    if s is WorkerState.IDLE]
+            idle = self.wake_first([w for w, s in self._states.items()
+                                    if s is WorkerState.IDLE])
             n = self.policy.workers_to_resume(
                 self._active_locked(), len(idle), ready_tasks)
             woken = idle[:max(0, n)]
@@ -171,37 +227,50 @@ class WorkerManager:
         spinning worker again (the paper's threads re-check ``δ > Δ`` on
         their next poll; in the simulator this is the equivalent hook).
 
-        Returns workers transitioned SPIN → IDLE.
+        Returns workers transitioned out of SPIN (idled or lent), park
+        order first.
         """
-        idled = []
+        parked = []
         with self._lock:
-            for w, s in list(self._states.items()):
-                if s is not WorkerState.SPIN:
-                    continue
+            spinning = self.park_first(
+                [w for w, s in self._states.items()
+                 if s is WorkerState.SPIN])
+            for w in spinning:
                 decision = self.policy.on_poll_empty(
                     w, self._active_locked(), self._spin_counts[w])
-                if decision is PollDecision.IDLE:
-                    self._set(w, WorkerState.IDLE)
-                    self.idles += 1
-                    idled.append(w)
-                elif decision is PollDecision.LEND:
-                    self._set(w, WorkerState.LENT)
-                    idled.append(w)
-        return idled
+                self._apply_poll_decision_locked(w, decision)
+                if decision in (PollDecision.IDLE, PollDecision.LEND):
+                    parked.append(w)
+        return parked
 
     # -- broker hooks (DLB) ---------------------------------------------------
 
-    def add_worker(self, worker_id: int) -> None:
-        """A borrowed CPU arrived from the broker; it starts spinning."""
+    def add_worker(self, worker_id: int, power=None,
+                   core_type: str = "") -> None:
+        """A borrowed CPU arrived from the broker; it starts spinning.
+
+        ``power``/``core_type`` carry the borrowed core's identity on
+        heterogeneous machines so its energy is billed correctly."""
         with self._lock:
             self._states[worker_id] = WorkerState.SPIN
             self._spin_counts[worker_id] = 0
             if self.energy is not None:
-                self.energy.add_core(worker_id, CoreState.SPIN, self.clock())
+                self.energy.add_core(worker_id, CoreState.SPIN,
+                                     self.clock(), power=power,
+                                     core_type=core_type)
 
     def remove_worker(self, worker_id: int) -> None:
-        """A borrowed CPU was reclaimed by its owner."""
+        """A borrowed CPU was reclaimed by its owner.
+
+        The core's energy timeline is closed with an OFF transition —
+        the owner accounts for it from here on; without this, a returned
+        CPU kept accruing SPIN power in the borrower's meter until
+        ``finish()``.
+        """
         with self._lock:
+            if worker_id in self._states and self.energy is not None:
+                self.energy.set_state(worker_id, CoreState.OFF,
+                                      self.clock())
             self._states.pop(worker_id, None)
             self._spin_counts.pop(worker_id, None)
 

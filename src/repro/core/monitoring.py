@@ -27,12 +27,14 @@ from __future__ import annotations
 import math
 import threading
 from dataclasses import dataclass, field
+from typing import Callable
 
 from .events import EventBus, EventKind, RuntimeEvent
 
 __all__ = [
     "EMA",
     "TypeMetrics",
+    "HeteroTypeSnapshot",
     "TaskMonitor",
     "AccuracyReport",
     "DEFAULT_MIN_SAMPLES",
@@ -103,6 +105,10 @@ class TypeMetrics:
 
     name: str
     unitary_cost: EMA = field(default_factory=EMA)
+    #: per-core-type unitary costs α_{j,c} — an E-core's elapsed/cost is
+    #: systematically larger than a P-core's, so mixing them in one EMA
+    #: biases the prediction on asymmetric machines
+    per_core: dict[str, EMA] = field(default_factory=dict)
     # Live workload accounting, in *cost units* (multiplied by α_j on read).
     ready_cost: float = 0.0
     executing_cost: float = 0.0
@@ -120,6 +126,22 @@ class TypeMetrics:
     @property
     def live_cost(self) -> float:
         return self.ready_cost + self.executing_cost
+
+
+@dataclass(frozen=True)
+class HeteroTypeSnapshot:
+    """Per-task-type Alg.-1 inputs with the per-core-type α split.
+
+    ``alpha_by_core`` maps core-type name → (α_{j,c}, sample count,
+    reliable) for every core type that has completed samples.
+    """
+
+    name: str
+    live_cost: float
+    alpha: float
+    live_instances: int
+    reliable: bool
+    alpha_by_core: dict[str, tuple[float, int, bool]]
 
 
 @dataclass(frozen=True)
@@ -146,6 +168,22 @@ class TaskMonitor:
         self._outstanding: dict[int, float] = {}
         self._predicted_at_start: dict[int, float] = {}
         self._subscribed_buses: list[EventBus] = []
+        # Worker id → core-type name; set by topology-aware frontends so
+        # completion events feed the per-(type × core-type) α_{j,c}.
+        self._core_type_of: Callable[[int], str] | None = None
+        self._freq_of: Callable[[int], float] | None = None
+
+    def set_core_type_of(self, fn: Callable[[int], str] | None,
+                         freq_of: Callable[[int], float] | None = None,
+                         ) -> None:
+        """Teach the monitor which core type each worker id runs on —
+        and, on DVFS machines, which frequency step, so α_{j,c} samples
+        are normalized to full speed (a sample measured at q=0.75 bakes
+        in the 1/q dilation; feeding it back raw would double-count the
+        slowdown against the planner's own /q and oscillate)."""
+        with self._lock:
+            self._core_type_of = fn
+            self._freq_of = freq_of
 
     # -- event-bus subscription -------------------------------------------
     # The monitor is ONE subscriber on the runtime event bus, not the
@@ -187,10 +225,17 @@ class TaskMonitor:
         elif ev.kind is EventKind.TASK_EXECUTE:
             self.on_task_execute(ev.task_id, ev.type_name, ev.cost)
         elif ev.kind is EventKind.TASK_COMPLETED:
+            core_type = (self._core_type_of(ev.worker_id)
+                         if (self._core_type_of is not None
+                             and ev.worker_id is not None) else None)
+            freq = (self._freq_of(ev.worker_id)
+                    if (self._freq_of is not None
+                        and ev.worker_id is not None) else 1.0)
             self.on_task_completed(ev.task_id, ev.type_name, ev.cost,
                                    ev.elapsed if ev.elapsed is not None
                                    else 0.0,
-                                   parent_id=ev.data.get("parent"))
+                                   parent_id=ev.data.get("parent"),
+                                   core_type=core_type, freq=freq)
 
     # -- type helpers ------------------------------------------------------
 
@@ -234,8 +279,14 @@ class TaskMonitor:
 
     def on_task_completed(self, task_id: int, type_name: str, cost: float,
                           elapsed: float,
-                          parent_id: int | None = None) -> None:
-        """Task finished; fold the measured time into the aggregates."""
+                          parent_id: int | None = None,
+                          core_type: str | None = None,
+                          freq: float = 1.0) -> None:
+        """Task finished; fold the measured time into the aggregates.
+
+        ``freq`` is the DVFS step the task ran at: the per-core α_{j,c}
+        stores the full-speed cost (``elapsed · freq``), keeping the
+        planner's capacity math frequency-independent."""
         with self._lock:
             m = self._metrics(type_name)
             m.executing_cost -= cost
@@ -243,6 +294,12 @@ class TaskMonitor:
             m.completed += 1
             if elapsed > 0.0 and cost > 0.0:
                 m.unitary_cost.update(elapsed / cost)
+                if core_type is not None:
+                    ema = m.per_core.get(core_type)
+                    if ema is None:
+                        ema = m.per_core[core_type] = EMA(self._decay,
+                                                          self._warmup)
+                    ema.update(elapsed * freq / cost)
             # Accuracy (Table 2): compare against prediction-at-ready.
             predicted = self._predicted_at_start.pop(task_id, None)
             self._outstanding.pop(task_id, None)
@@ -283,6 +340,28 @@ class TaskMonitor:
                 ))
         return out
 
+    def workload_snapshot_hetero(self, min_samples: int | None = None,
+                                 ) -> list[HeteroTypeSnapshot]:
+        """Like :meth:`workload_snapshot`, with the per-core-type α split
+        the heterogeneous predictor needs (Δ_c fills fastest cores first
+        using α_{j,c} normalized by core speed)."""
+        k = self.min_samples if min_samples is None else min_samples
+        out = []
+        with self._lock:
+            for name, m in self._types.items():
+                if m.live_instances <= 0:
+                    continue
+                out.append(HeteroTypeSnapshot(
+                    name=name,
+                    live_cost=m.live_cost,
+                    alpha=m.unitary_cost.value,
+                    live_instances=m.live_instances,
+                    reliable=m.unitary_cost.reliable(k),
+                    alpha_by_core={c: (e.value, e.count, e.reliable(k))
+                                   for c, e in m.per_core.items()},
+                ))
+        return out
+
     def outstanding_seconds(self, min_samples: int | None = None) -> tuple[float, int, int]:
         """Aggregate (predicted_seconds, live_instances, unreliable_instances).
 
@@ -301,12 +380,17 @@ class TaskMonitor:
 
     # -- reporting -----------------------------------------------------------
 
-    def unitary_cost(self, type_name: str) -> float | None:
+    def unitary_cost(self, type_name: str,
+                     core_type: str | None = None) -> float | None:
         with self._lock:
             m = self._types.get(type_name)
-            if m is None or m.unitary_cost.count == 0:
+            if m is None:
                 return None
-            return m.unitary_cost.value
+            ema = (m.unitary_cost if core_type is None
+                   else m.per_core.get(core_type))
+            if ema is None or ema.count == 0:
+                return None
+            return ema.value
 
     def accuracy_report(self) -> AccuracyReport:
         with self._lock:

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import enum
 from abc import ABC, abstractmethod
+from typing import Callable, Mapping
 
 from .prediction import CPUPredictor
 
@@ -34,6 +35,7 @@ __all__ = [
     "IdlePolicy",
     "HybridPolicy",
     "PredictionPolicy",
+    "HeteroPredictionPolicy",
 ]
 
 
@@ -181,4 +183,78 @@ class PredictionPolicy(Policy):
     def target(self, queued: int, active: int, n_resources: int) -> int:
         if queued + active <= 0:
             return 0  # no live work ⇒ scale to zero
-        return self.predictor.delta
+        # Cap at what the frontend owns: the predictor may be configured
+        # with allow_oversubscription (the DLB arrangement), but a
+        # non-sharing pull-style frontend (autoscaler / elastic trainer)
+        # cannot scale beyond its own resources.
+        return min(self.predictor.delta, n_resources)
+
+
+class HeteroPredictionPolicy(PredictionPolicy):
+    """Frequency-aware prediction on heterogeneous cores.
+
+    Like :class:`PredictionPolicy`, but the idle/spin decision is made
+    per *core type* against the predictor's Δ_c split (fastest cores are
+    filled first by :meth:`~repro.core.prediction.CPUPredictor.compute_plan`),
+    so surplus capacity is parked on the right silicon ("park the E-cores
+    last" vs "park the P-cores last" is the manager's park order; this
+    policy decides *how many* of each type stay hot).  The recommended
+    DVFS step per type is applied by the governor on every tick.
+
+    With a single homogeneous core type every decision reduces to the
+    parent class — the parity the tests pin down.
+
+    The governor binds :meth:`bind_topology` after the worker manager
+    exists; unbound (pull-style frontends), decisions fall back to the
+    total-Δ logic.
+    """
+
+    name = "hetero-prediction"
+
+    def __init__(self, predictor: CPUPredictor) -> None:
+        super().__init__(predictor)
+        self._type_of: Callable[[int], str] | None = None
+        self._active_by_type: Callable[[], Mapping[str, int]] | None = None
+
+    def bind_topology(self, type_of: Callable[[int], str],
+                      active_by_type: Callable[[], Mapping[str, int]],
+                      ) -> None:
+        """Wire worker→core-type mapping and the per-type active counts.
+
+        ``active_by_type`` is called from inside the worker manager's
+        lock (poll decisions happen there), so it must be the manager's
+        *unlocked* reader.
+        """
+        self._type_of = type_of
+        self._active_by_type = active_by_type
+
+    def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
+                      ) -> PollDecision:
+        if self._type_of is None or self._active_by_type is None:
+            return super().on_poll_empty(worker_id, active, spin_count)
+        by_type = self.predictor.delta_by_type
+        if not by_type:
+            return super().on_poll_empty(worker_id, active, spin_count)
+        ct = self._type_of(worker_id)
+        if self._active_by_type().get(ct, 0) > by_type.get(ct, 0):
+            return PollDecision.IDLE
+        return PollDecision.SPIN
+
+    def workers_to_resume(self, active: int, idle: int, ready_tasks: int,
+                          ) -> int:
+        if self._active_by_type is None:
+            return super().workers_to_resume(active, idle, ready_tasks)
+        by_type = self.predictor.delta_by_type
+        if not by_type:
+            return super().workers_to_resume(active, idle, ready_tasks)
+        # Per-type deficit, not the total: a stale spinner on a slow
+        # type must not mask a missing fast core — critical-path tasks
+        # would otherwise land on the slow silicon.  (The manager wakes
+        # in reverse park order, so fast types come back first; any
+        # over-waking is trimmed at the next prediction tick.)
+        counts = self._active_by_type()
+        want = sum(max(0, d - counts.get(ct, 0))
+                   for ct, d in by_type.items())
+        if want <= 0:
+            return 0
+        return min(idle, want, ready_tasks)

@@ -178,11 +178,16 @@ class ResourceBroker:
         """Borrower hands a flagged CPU back; returns the owner job name."""
         with self._lock:
             owner = self._owner[cpu]
+            owner_acct = self._jobs[owner]
             self._jobs[borrower].borrowed.discard(cpu)
-            self._jobs[owner].lent.discard(cpu)
-            self._jobs[owner].reclaim_wanted = False
+            owner_acct.lent.discard(cpu)
             self._holder[cpu] = owner
             self._return_flags.discard(cpu)
+            # The reclaim stays wanted while *other* lent CPUs still have
+            # pending return flags (same recomputation as lend()) — a
+            # blanket False silently dropped multi-CPU reclaims.
+            owner_acct.reclaim_wanted = bool(
+                self._return_flags & owner_acct.lent)
             return owner
 
     def holder(self, cpu: int) -> str:

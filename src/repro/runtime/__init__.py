@@ -6,12 +6,12 @@ reproduces the paper's policy dynamics deterministically on a 1-core host.
 from .task import Task, TaskGraph
 from .scheduler import Scheduler
 from .thread_executor import ThreadExecutor, ExecutorReport
-from .machine import MachineModel, MN4, KNL
+from .machine import MachineModel, MN4, KNL, HYBRID_PE, DVFS2
 from .sim import SimExecutor, SimJobSpec, SimReport, SimCluster
 
 __all__ = [
     "Task", "TaskGraph", "Scheduler",
     "ThreadExecutor", "ExecutorReport",
-    "MachineModel", "MN4", "KNL",
+    "MachineModel", "MN4", "KNL", "HYBRID_PE", "DVFS2",
     "SimExecutor", "SimJobSpec", "SimReport", "SimCluster",
 ]

@@ -7,6 +7,17 @@ with these models.  ``core_speed`` rescales task service times (KNL cores
 are slower per-core: lower frequency, narrower OoO core — we use the
 frequency ratio 1.30/2.10 ≈ 0.62 as the first-order factor).
 
+Heterogeneous machines are described by ``core_types`` — an ordered
+tuple of :class:`~repro.core.topology.CoreType` (count, relative speed,
+per-state power, DVFS steps).  Cores are numbered positionally: the
+first type owns indices ``[0, count)``, and so on.  Two asymmetric
+presets ship alongside the paper's homogeneous machines:
+
+* :data:`HYBRID_PE` — an Alder-Lake-style hybrid: 8 fast P-cores plus
+  16 slower, lower-power E-cores (big.LITTLE economics);
+* :data:`DVFS2` — a 2-socket symmetric machine whose sockets can be
+  independently re-clocked to 75% / 87.5% / 100% of base frequency.
+
 ``resume_latency`` is the idle→running wakeup cost (futex wake + context
 switch, O(µs)) that makes *idle* policies expensive for fine-grained tasks;
 ``poll_interval`` is the virtual duration of one empty scheduler poll
@@ -19,7 +30,10 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-__all__ = ["MachineModel", "MN4", "KNL"]
+from ..core.energy import PowerModel
+from ..core.topology import CoreTopology, CoreType
+
+__all__ = ["MachineModel", "MN4", "KNL", "HYBRID_PE", "DVFS2"]
 
 
 @dataclass(frozen=True)
@@ -33,10 +47,60 @@ class MachineModel:
     dlb_call_overhead: float = 1e-6  # one DLB library call (paper §3.3:
     #                                  "such calls do not come for free")
     monitor_event_overhead: float = 5e-8  # per monitoring event
+    #: asymmetric core description; None ⇒ homogeneous (all cores equal)
+    core_types: tuple[CoreType, ...] | None = None
 
-    def service_time(self, base: float) -> float:
-        return base / self.core_speed
+    def __post_init__(self) -> None:
+        if self.core_types is not None:
+            total = sum(t.count for t in self.core_types)
+            if total != self.n_cores:
+                raise ValueError(
+                    f"core_types counts sum to {total}, "
+                    f"but n_cores is {self.n_cores}")
+        # Cache the topology once: service_time() sits on the simulator's
+        # per-task hot path and must not rebuild/re-validate it.
+        topo = (CoreTopology(types=self.core_types)
+                if self.core_types is not None
+                else CoreTopology.homogeneous(self.n_cores))
+        object.__setattr__(self, "_topology", topo)
+
+    def topology(self) -> CoreTopology:
+        """The machine's :class:`CoreTopology` (synthesized single-type
+        for homogeneous machines — hetero-aware code needs no branch)."""
+        return self._topology
+
+    def speed_of(self, core: int | None = None) -> float:
+        """Absolute speed of ``core`` (global simulator ids wrap per
+        machine); None ⇒ the machine's reference speed."""
+        if core is None or self.core_types is None:
+            return self.core_speed
+        return self.core_speed * self._topology.speed_of(core)
+
+    def service_time(self, base: float, core: int | None = None,
+                     freq: float = 1.0) -> float:
+        return base / (self.speed_of(core) * freq)
 
 
 MN4 = MachineModel(name="MN4", n_cores=48, core_speed=1.0)
 KNL = MachineModel(name="KNL", n_cores=64, core_speed=0.62)
+
+#: P+E hybrid: 8 performance cores + 16 efficiency cores at ~55% speed
+#: and ~40% power — the asymmetric-silicon scenario the homogeneous
+#: ``core_speed`` scalar cannot express.
+HYBRID_PE = MachineModel(
+    name="HYBRID-PE", n_cores=24,
+    core_types=(
+        CoreType(name="P", count=8, speed=1.0),
+        CoreType(name="E", count=16, speed=0.55,
+                 power=PowerModel(active=0.4, spin=0.4, idle=0.05)),
+    ))
+
+#: Two symmetric sockets with independent DVFS domains (steps as
+#: fractions of base frequency) — the frequency-aware predictor may
+#: stretch a lightly-loaded socket to a lower step to cut EDP.
+DVFS2 = MachineModel(
+    name="DVFS2", n_cores=48,
+    core_types=(
+        CoreType(name="S0", count=24, freq_steps=(0.75, 0.875, 1.0)),
+        CoreType(name="S1", count=24, freq_steps=(0.75, 0.875, 1.0)),
+    ))

@@ -33,7 +33,7 @@ import itertools
 from dataclasses import dataclass, replace
 from typing import Any
 
-from ..core.energy import CoreState, PowerModel
+from ..core.energy import PowerModel
 from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
                              GovernorSpec, ResourceGovernor)
@@ -41,6 +41,7 @@ from ..core.manager import WorkerState
 from ..core.policies import PollDecision
 from ..core.prediction import DEFAULT_PREDICTION_RATE_S, PredictionConfig
 from ..core.sharing import ResourceBroker, SharingPolicy
+from ..core.topology import CoreTopology
 from ..workloads.arrivals import ArrivalProcess
 from .machine import MachineModel
 from .scheduler import Scheduler
@@ -107,10 +108,34 @@ class _SimJob:
         self.spec = spec
         self.name = spec.name
         self.graph = spec.graph
-        self.cpus = cpus
         self.bus = spec.bus if spec.bus is not None else EventBus()
+        gspec = spec.governor_spec(len(cpus))
+        machine = cluster.machine
+        if machine.core_types is not None and gspec.topology is None:
+            # asymmetric machine: hand the topology to the whole stack
+            # (per-type monitoring/energy, speed-aware Δ, park order).
+            # A job pinned to a cpu subset gets a *sliced* topology so
+            # its power accounting matches the per-core service speeds
+            # the machine applies; the id list is grouped by type so the
+            # governor's positional mapping lines up with the machine's.
+            topo = machine.topology()
+            if len(cpus) == machine.n_cores:
+                gspec = replace(gspec, topology=topo)
+            else:
+                rank = {t.name: i for i, t in enumerate(topo.types)}
+                cpus = sorted(cpus,
+                              key=lambda c: (rank[topo.type_of(c)], c))
+                counts: dict[str, int] = {}
+                for c in cpus:
+                    ct = topo.type_of(c)
+                    counts[ct] = counts.get(ct, 0) + 1
+                sliced = CoreTopology(types=tuple(
+                    replace(t, count=counts[t.name])
+                    for t in topo.types if t.name in counts))
+                gspec = replace(gspec, topology=sliced)
+        self.cpus = cpus
         self.governor = ResourceGovernor(
-            spec.governor_spec(len(cpus)), clock=lambda: cluster.now,
+            gspec, clock=lambda: cluster.now,
             worker_ids=list(cpus), t0=cluster.now, bus=self.bus)
         self.monitor = self.governor.monitor
         self.scheduler = Scheduler(self.monitor, bus=self.bus,
@@ -136,8 +161,12 @@ class _SimJob:
         return self.arrivals_pending == 0 and self.scheduler.drained()
 
     def spinning_workers(self) -> list[int]:
-        return [w for w, s in self.manager.states().items()
-                if s is WorkerState.SPIN and w not in self.waking]
+        # wake_first order: on heterogeneous machines ready work is
+        # dispatched to the fastest spinning cores first (identity order
+        # on homogeneous machines)
+        return self.manager.wake_first(
+            [w for w, s in self.manager.states().items()
+             if s is WorkerState.SPIN and w not in self.waking])
 
 
 class SimCluster:
@@ -294,8 +323,10 @@ class SimCluster:
         if job.done:
             return  # stop rescheduling; lets the loop terminate
         job.governor.tick()
-        # Trim: re-evaluate spinning workers against the fresh Δ.
-        for w in job.spinning_workers():
+        # Trim: re-evaluate spinning workers against the fresh Δ, in
+        # park order (spinning_workers is wake/dispatch-ordered — using
+        # it here would park the fastest cores first).
+        for w in job.manager.park_first(job.spinning_workers()):
             if job.scheduler.ready_count > 0:
                 break
             decision = job.manager.poll_empty(w)
@@ -361,7 +392,8 @@ class SimCluster:
                 "(required by the simulator)")
         job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
         job.manager.task_started(cpu)
-        dur = self.machine.service_time(task.service_time)
+        dur = self.machine.service_time(task.service_time, core=cpu,
+                                        freq=job.governor.frequency_of(cpu))
         if job.monitor is not None:
             dur += 3 * self.machine.monitor_event_overhead
         self._push(self.now + dur, _FINISH, (job.name, cpu, task, dur))
@@ -404,8 +436,8 @@ class SimCluster:
         holder = self.broker.lend(job.name, cpu)
         if was_borrowed:
             job.borrowed.discard(cpu)
+            # remove_worker closes the core's energy timeline (OFF)
             job.manager.remove_worker(cpu)
-            job.energy.set_state(cpu, CoreState.OFF, self.now)
             if holder:
                 self._hand_cpu_to(self.jobs[holder], cpu)
         # Owned CPU stays registered as LENT (energy OFF) in our manager.
@@ -414,8 +446,8 @@ class SimCluster:
         assert self.broker is not None
         owner_name = self.broker.return_cpu(job.name, cpu)
         job.borrowed.discard(cpu)
+        # remove_worker closes the core's energy timeline (OFF)
         job.manager.remove_worker(cpu)
-        job.energy.set_state(cpu, CoreState.OFF, self.now)
         self._hand_cpu_to(self.jobs[owner_name], cpu)
 
     def _hand_cpu_to(self, job: _SimJob, cpu: int) -> None:
@@ -424,7 +456,12 @@ class SimCluster:
             job.manager.reclaim(cpu)
         else:
             job.borrowed.add(cpu)
-            job.manager.add_worker(cpu)
+            # announce the borrowed core's true identity so α_{j,c},
+            # energy billing and DVFS lookups use the machine's type,
+            # not the job's (possibly sliced) positional mapping
+            ct = (self.machine.topology().core_type_at(cpu)
+                  if self.machine.core_types is not None else None)
+            job.governor.adopt_worker(cpu, core_type=ct)
         job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
         job.waking.add(cpu)
         self._push(self.now + self.machine.borrow_latency, _RESUME,

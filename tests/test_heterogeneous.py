@@ -1,0 +1,506 @@
+"""Heterogeneous-core machine model + frequency-aware prediction.
+
+Covers the topology data model, per-(task-type × core-type) monitoring,
+the per-core-type Δ_c plan (fastest cores first, count fallback, DVFS
+step), core-type-aware parking/waking, per-type energy accounting — and
+the two acceptance properties: exact homogeneous parity with the
+existing ``prediction`` policy, and an EDP win (within a makespan
+guard) over ``busy`` on an asymmetric preset.
+"""
+
+import pytest
+
+from repro.core.energy import CoreState, EnergyMeter, PowerModel
+from repro.core.events import EventBus, EventKind
+from repro.core.governor import GovernorSpec, ResourceGovernor
+from repro.core.monitoring import TaskMonitor
+from repro.core.policies import HeteroPredictionPolicy, PollDecision
+from repro.core.prediction import CPUPredictor, PredictionConfig
+from repro.core.topology import CoreTopology, CoreType
+from repro.runtime import (DVFS2, HYBRID_PE, MN4, MachineModel,
+                           SimExecutor, Task, TaskGraph)
+
+PE = CoreTopology(types=(
+    CoreType(name="P", count=4, speed=1.0),
+    CoreType(name="E", count=8, speed=0.5,
+             power=PowerModel(active=0.4, spin=0.4, idle=0.05)),
+))
+
+
+def _wide_graph(n=300, cost=1.0, service=2e-4) -> TaskGraph:
+    g = TaskGraph()
+    for _ in range(n):
+        g.add(Task(type_name="t", cost=cost, service_time=service))
+    return g
+
+
+class TestTopology:
+    def test_positional_mapping(self):
+        assert PE.n_cores == 12
+        assert [PE.type_of(i) for i in (0, 3, 4, 11)] == \
+            ["P", "P", "E", "E"]
+        assert PE.speed_of(0) == 1.0 and PE.speed_of(11) == 0.5
+        # global simulator ids wrap per machine
+        assert PE.type_of(12) == "P" and PE.type_of(16) == "E"
+
+    def test_fastest_first_and_mean_speed(self):
+        assert [t.name for t in PE.fastest_first()] == ["P", "E"]
+        assert PE.mean_speed() == pytest.approx((4 * 1.0 + 8 * 0.5) / 12)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            CoreType(name="x", count=0)
+        with pytest.raises(ValueError):
+            CoreType(name="x", count=1, speed=0.0)
+        with pytest.raises(ValueError):
+            CoreType(name="x", count=1, freq_steps=(1.0, 0.5))  # descending
+        with pytest.raises(ValueError):
+            CoreType(name="x", count=1, freq_steps=(0.5, 1.5))  # > 1
+        with pytest.raises(ValueError):
+            CoreTopology(types=(CoreType(name="a", count=1),
+                                CoreType(name="a", count=1)))
+
+    def test_round_trip(self):
+        assert CoreTopology.from_dict(PE.to_dict()) == PE
+
+    def test_machine_presets(self):
+        assert HYBRID_PE.topology().type_names() == ["P", "E"]
+        assert DVFS2.topology().by_name("S0").freq_steps == \
+            (0.75, 0.875, 1.0)
+        with pytest.raises(ValueError):
+            MachineModel(name="bad", n_cores=4, core_types=(
+                CoreType(name="a", count=3),))  # counts don't sum
+
+    def test_machine_service_time(self):
+        # P core at full speed, E core at 55%, frequency divides further
+        base = 1e-3
+        assert HYBRID_PE.service_time(base, core=0) == base
+        assert HYBRID_PE.service_time(base, core=8) == \
+            pytest.approx(base / 0.55)
+        assert HYBRID_PE.service_time(base, core=0, freq=0.5) == \
+            pytest.approx(2 * base)
+        # homogeneous machines ignore the core index
+        assert MN4.service_time(base, core=17) == base
+
+
+class TestMonitorPerCoreType:
+    def test_alpha_split_by_core_type(self):
+        m = TaskMonitor(min_samples=2)
+        m.set_core_type_of(lambda w: "P" if w < 4 else "E")
+        for i in range(4):
+            m.on_task_ready(i, "t", 1.0)
+            m.on_task_execute(i, "t", 1.0)
+            # P cores twice as fast as E cores
+            worker = 0 if i % 2 == 0 else 7
+            m.on_task_completed(i, "t", 1.0, 1e-3 if worker < 4 else 2e-3,
+                                core_type="P" if worker < 4 else "E")
+        assert m.unitary_cost("t", core_type="P") == pytest.approx(1e-3)
+        assert m.unitary_cost("t", core_type="E") == pytest.approx(2e-3)
+        # the aggregate mixes both
+        assert 1e-3 < m.unitary_cost("t") < 2e-3
+
+    def test_alpha_normalized_by_frequency(self):
+        """Samples measured on a downclocked core bake in the 1/q
+        dilation; the per-core α must store the full-speed cost or the
+        planner double-counts the slowdown and oscillates."""
+        m = TaskMonitor(min_samples=1)
+        m.on_task_ready(0, "t", 1.0)
+        m.on_task_execute(0, "t", 1.0)
+        m.on_task_completed(0, "t", 1.0, 2e-3, core_type="S", freq=0.5)
+        assert m.unitary_cost("t", core_type="S") == pytest.approx(1e-3)
+        # the aggregate keeps the raw (wall-clock) sample
+        assert m.unitary_cost("t") == pytest.approx(2e-3)
+
+    def test_hetero_snapshot_reliability(self):
+        m = TaskMonitor(min_samples=2)
+        m.on_task_ready(0, "t", 1.0)
+        m.on_task_execute(0, "t", 1.0)
+        m.on_task_completed(0, "t", 1.0, 1e-3, core_type="P")
+        m.on_task_ready(1, "t", 1.0)
+        (snap,) = m.workload_snapshot_hetero()
+        assert snap.alpha_by_core["P"][1] == 1
+        assert not snap.alpha_by_core["P"][2]   # 1 sample < min_samples=2
+
+
+def _monitor_with_work(n_ready: int, alpha: float = 50e-6,
+                       min_samples: int = 1,
+                       core_type: str = "P") -> TaskMonitor:
+    """α = rate ⇒ each live task is one CPU-window of work on a
+    unit-speed core."""
+    m = TaskMonitor(min_samples=min_samples)
+    for i in range(3):
+        m.on_task_ready(i, "t", 1.0)
+        m.on_task_execute(i, "t", 1.0)
+        m.on_task_completed(i, "t", 1.0, alpha, core_type=core_type)
+    for i in range(n_ready):
+        m.on_task_ready(100 + i, "t", 1.0)
+    return m
+
+
+class TestHeteroPlan:
+    def test_fastest_cores_filled_first(self):
+        m = _monitor_with_work(n_ready=10)      # 10 unit-speed windows
+        pred = CPUPredictor(m, n_cpus=12, topology=PE,
+                            config=PredictionConfig(rate_s=50e-6,
+                                                    min_samples=1))
+        pred.tick()
+        # all 4 P cores fill first; the remaining work lands on E cores,
+        # Δ ≤ live instances (Alg. 1's ΣM cap) trims the slow type
+        assert pred.delta_by_type == {"P": 4, "E": 6}
+        assert pred.delta == 10
+
+    def test_instance_cap_trims_slowest_type(self):
+        m = _monitor_with_work(n_ready=6)
+        pred = CPUPredictor(m, n_cpus=12, topology=PE,
+                            config=PredictionConfig(rate_s=50e-6,
+                                                    min_samples=1))
+        pred.tick()
+        # 6 windows of work: E cores at speed 0.5 would need 4 cores for
+        # the last 2 windows, but only 6 task instances exist (one task
+        # occupies one core) — the surplus is trimmed from the slow type
+        assert pred.delta_by_type == {"P": 4, "E": 2}
+        assert pred.delta == 6
+
+    def test_count_fallback_takes_one_core_each(self):
+        m = TaskMonitor(min_samples=4)          # nothing reliable yet
+        for i in range(5):
+            m.on_task_ready(i, "t", 1.0)
+        pred = CPUPredictor(m, n_cpus=12, topology=PE,
+                            config=PredictionConfig(min_samples=4))
+        pred.tick()
+        # 5 instances, fastest first: all 4 P cores + 1 E core
+        assert pred.delta_by_type == {"P": 4, "E": 1}
+        assert pred.delta == 5
+
+    def test_no_live_work_keeps_one_fastest_core(self):
+        m = TaskMonitor(min_samples=1)
+        pred = CPUPredictor(m, n_cpus=12, topology=PE)
+        pred.tick()
+        assert pred.delta == 1
+        assert pred.delta_by_type == {"P": 1}
+
+    def test_topology_size_must_match(self):
+        with pytest.raises(ValueError):
+            CPUPredictor(TaskMonitor(), n_cpus=5, topology=PE)
+
+    def test_fast_core_reserve_keeps_p_cores_awake(self):
+        """On a speed-asymmetric topology the fastest type stays fully
+        awake while live work exists: a parked P-core would lose the
+        dispatch race to a spinning E-core on the critical path."""
+        m = _monitor_with_work(n_ready=1)   # one window of work
+        pred = CPUPredictor(m, n_cpus=12, topology=PE,
+                            config=PredictionConfig(rate_s=50e-6,
+                                                    min_samples=1))
+        pred.tick()
+        assert pred.delta_by_type["P"] == 4     # all P reserved
+        assert pred.delta_by_type.get("E", 0) == 0
+
+    def test_no_reserve_on_single_speed_topology(self):
+        two_sockets = CoreTopology(types=(CoreType(name="S0", count=4),
+                                          CoreType(name="S1", count=4)))
+        m = _monitor_with_work(n_ready=1, core_type="S0")
+        pred = CPUPredictor(m, n_cpus=8, topology=two_sockets,
+                            config=PredictionConfig(rate_s=50e-6,
+                                                    min_samples=1))
+        pred.tick()
+        assert pred.delta == 1                  # no reserve boost
+
+
+class TestFrequencyRecommendation:
+    DVFS = CoreTopology(types=(
+        CoreType(name="S", count=8, freq_steps=(0.75, 0.875, 1.0)),))
+
+    def _pred(self, n_ready, alpha=50e-6, **cfg):
+        m = _monitor_with_work(n_ready=n_ready, alpha=alpha,
+                               core_type="S")
+        cfg.setdefault("rate_s", 50e-6)
+        cfg.setdefault("min_samples", 1)
+        pred = CPUPredictor(m, n_cpus=8, topology=self.DVFS,
+                            config=PredictionConfig(**cfg))
+        pred.tick()
+        return pred
+
+    def test_saturated_type_stays_at_max_step(self):
+        pred = self._pred(n_ready=8)        # demand == capacity
+        assert pred.freq_by_type == {"S": 1.0}
+
+    def test_slack_stretches_wide_and_slow(self):
+        # 6 half-window tasks = 3 windows of demand on 8 cores: the plan
+        # widens to 5 cores (margin 1.25) at the EDP-optimal 0.75 step —
+        # same throughput, lower modeled P_active(q)/q²
+        pred = self._pred(n_ready=6, alpha=25e-6)
+        assert pred.freq_by_type["S"] == 0.75
+        assert pred.delta_by_type["S"] == 5
+
+    def test_no_spare_instances_means_no_stretch(self):
+        # 2 long tasks on 8 cores: slack in cores, but only 2 runnable
+        # instances — widening is impossible, so slowing the 2 active
+        # cores would dilate the critical path; stay at max step
+        pred = self._pred(n_ready=2)
+        assert pred.freq_by_type["S"] == 1.0
+
+    def test_freq_floor_guards_the_critical_path(self):
+        pred = self._pred(n_ready=6, alpha=25e-6, freq_floor=0.9)
+        # 0.75 and 0.875 are below the floor ⇒ stay at 1.0
+        assert pred.freq_by_type["S"] == 1.0
+
+    def test_count_fallback_disables_stretching(self):
+        m = TaskMonitor(min_samples=4)
+        for i in range(2):
+            m.on_task_ready(i, "t", 1.0)    # unknown durations
+        pred = CPUPredictor(m, n_cpus=8, topology=self.DVFS,
+                            config=PredictionConfig(min_samples=4))
+        pred.tick()
+        assert pred.freq_by_type["S"] == 1.0
+
+
+class TestHeteroPolicy:
+    def test_per_type_poll_decisions(self):
+        m = _monitor_with_work(n_ready=6)
+        pred = CPUPredictor(m, n_cpus=12, topology=PE,
+                            config=PredictionConfig(rate_s=50e-6,
+                                                    min_samples=1))
+        pred.tick()                          # Δ = {P: 4, E: 4}
+        pol = HeteroPredictionPolicy(pred)
+        counts = {"P": 4, "E": 5}
+        pol.bind_topology(lambda w: "P" if w < 4 else "E", lambda: counts)
+        # E is over its Δ_c ⇒ an E worker parks, a P worker spins
+        assert pol.on_poll_empty(7, active=9, spin_count=1) \
+            is PollDecision.IDLE
+        assert pol.on_poll_empty(0, active=9, spin_count=1) \
+            is PollDecision.SPIN
+
+    def test_unbound_falls_back_to_total_delta(self):
+        m = _monitor_with_work(n_ready=6)
+        pred = CPUPredictor(m, n_cpus=12, topology=PE,
+                            config=PredictionConfig(rate_s=50e-6,
+                                                    min_samples=1))
+        pred.tick()
+        pol = HeteroPredictionPolicy(pred)
+        assert pred.delta == 6
+        assert pol.on_poll_empty(0, active=7, spin_count=1) \
+            is PollDecision.IDLE             # 7 > Δ=6
+        assert pol.on_poll_empty(0, active=6, spin_count=1) \
+            is PollDecision.SPIN
+
+
+class TestGovernorWiring:
+    def test_spec_round_trip_with_topology(self):
+        spec = GovernorSpec(resources=12, policy="hetero-prediction",
+                            topology=PE, park_order="fast-first")
+        assert GovernorSpec.from_dict(spec.to_dict()) == spec
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            GovernorSpec(resources=4, park_order="sideways")
+        with pytest.raises(ValueError):
+            GovernorSpec(resources=4, topology=PE)  # 12 != 4
+
+    def test_park_and_wake_order(self):
+        gov = ResourceGovernor(
+            GovernorSpec(resources=12, policy="hetero-prediction",
+                         topology=PE),
+            clock=lambda: 0.0)
+        mgr = gov.manager
+        workers = list(range(12))
+        # slow-first parking: E cores (ids 4..11) trimmed first
+        assert mgr.park_first(workers)[:8] == list(range(4, 12))
+        # waking brings P cores (ids 0..3) back first
+        assert mgr.wake_first(workers)[:4] == [0, 1, 2, 3]
+
+    def test_fast_first_park_order(self):
+        gov = ResourceGovernor(
+            GovernorSpec(resources=12, policy="hetero-prediction",
+                         topology=PE, park_order="fast-first"),
+            clock=lambda: 0.0)
+        assert gov.manager.park_first(list(range(12)))[:4] == [0, 1, 2, 3]
+
+    def test_per_type_energy_and_report(self):
+        gov = ResourceGovernor(
+            GovernorSpec(resources=12, policy="hetero-prediction",
+                         topology=PE),
+            clock=lambda: 0.0)
+        gov.finish(0.0)
+        rep = gov.report()
+        assert set(rep.state_seconds_by_type) == {"P", "E"}
+        assert rep.freq_by_type == {"P": 1.0, "E": 1.0}
+
+
+class TestHomogeneousParity:
+    """With one core type, per-type prediction must reproduce today's Δ
+    sequence and reports exactly (acceptance criterion)."""
+
+    def _run(self, policy: str):
+        deltas = []
+        bus = EventBus()
+        bus.subscribe(lambda ev: deltas.append(ev.data["delta"]),
+                      kinds=(EventKind.PREDICTION,))
+        g = TaskGraph()
+        prev = None
+        for i in range(120):
+            t = Task(type_name=("a" if i % 3 else "b"),
+                     cost=1.0 + (i % 5), service_time=1e-4 * (1 + i % 4))
+            if prev is not None and i % 7 == 0:
+                t.depends_on(prev)
+            g.add(t)
+            prev = t
+        spec = GovernorSpec(resources=MN4.n_cores, policy=policy,
+                            monitoring=True)
+        report = SimExecutor(MN4, spec=spec, bus=bus).run(g)
+        assert deltas, "no PREDICTION events captured"
+        return report, deltas
+
+    def test_delta_sequence_and_report_match(self):
+        base, base_deltas = self._run("prediction")
+        het, het_deltas = self._run("hetero-prediction")
+        assert het_deltas == base_deltas
+        assert het.makespan == base.makespan
+        assert het.energy == base.energy
+        assert het.edp == base.edp
+        assert het.tasks_completed == base.tasks_completed
+        assert het.resumes == base.resumes
+        assert het.idles == base.idles
+        assert het.predictions == base.predictions
+        assert het.state_seconds == base.state_seconds
+        # homogeneous stacks report no per-type split and no made-up
+        # frequency entry for the synthesized type
+        assert het.state_seconds_by_type == {}
+        assert het.freq_by_type == base.freq_by_type == {}
+
+
+class TestAsymmetricSim:
+    def test_hetero_beats_busy_on_edp(self):
+        """On an asymmetric preset the frequency-aware prediction policy
+        must cut EDP vs busy without giving up >10% makespan."""
+        reports = {}
+        for policy in ("busy", "hetero-prediction"):
+            spec = GovernorSpec(resources=HYBRID_PE.n_cores, policy=policy,
+                                monitoring=True)
+            reports[policy] = SimExecutor(HYBRID_PE, spec=spec).run(
+                _wide_graph(n=400))
+        busy, het = reports["busy"], reports["hetero-prediction"]
+        assert het.edp < busy.edp
+        assert het.makespan <= 1.10 * busy.makespan
+        # the asymmetric report carries the per-type split
+        assert set(het.state_seconds_by_type) == {"P", "E"}
+
+    def test_dvfs_machine_runs_and_reports_steps(self):
+        spec = GovernorSpec(resources=DVFS2.n_cores,
+                            policy="hetero-prediction", monitoring=True)
+        rep = SimExecutor(DVFS2, spec=spec).run(_wide_graph(n=150))
+        assert rep.tasks_completed == 150
+        assert set(rep.freq_by_type) == {"S0", "S1"}
+        for q in rep.freq_by_type.values():
+            assert q in (0.75, 0.875, 1.0)
+
+    def test_dvfs_stretch_fires_under_partial_load(self):
+        """Micro-tasks at ~30% of capacity: the plan widens each socket
+        and downclocks it — lower energy and EDP than busy at the same
+        makespan (the scenario BENCH_heterogeneous tracks)."""
+        from repro.workloads.arrivals import PoissonArrivals
+
+        def make_graph():
+            g = TaskGraph()
+            for _ in range(4000):
+                g.add(Task(type_name="micro", cost=1.0, service_time=2e-5))
+            return g
+
+        arrivals = PoissonArrivals(rate=0.3 * DVFS2.n_cores / 2e-5, seed=1)
+        reports = {}
+        for policy in ("busy", "hetero-prediction"):
+            spec = GovernorSpec(resources=DVFS2.n_cores, policy=policy,
+                                monitoring=True)
+            reports[policy] = SimExecutor(DVFS2, spec=spec).run(
+                make_graph(), arrivals=arrivals)
+        busy, het = reports["busy"], reports["hetero-prediction"]
+        assert any(q < 1.0 for q in het.freq_by_type.values())
+        assert het.energy < busy.energy
+        assert het.edp < busy.edp
+        assert het.makespan <= 1.10 * busy.makespan
+
+    def test_subset_job_gets_sliced_topology_power(self):
+        """A job pinned to a cpu subset of an asymmetric machine must
+        account energy with the same per-core types the machine uses
+        for service times (regression: it used to bill E-cores at
+        P-core power while running them at E-core speed)."""
+        from repro.runtime import SimCluster, SimJobSpec
+
+        cl = SimCluster(HYBRID_PE)
+        # the 16 E-cores only (machine ids 8..23)
+        cl.add_job(SimJobSpec(name="e-only", graph=_wide_graph(n=64),
+                              policy="busy", cpus=list(range(8, 24))))
+        rep = cl.run()["e-only"]
+        assert set(rep.state_seconds_by_type) == {"E"}
+        # busy on E-cores: everything active/spin at the E power (0.4)
+        total_s = sum(rep.state_seconds.values())
+        assert rep.energy == pytest.approx(0.4 * total_s)
+        # and the service times are E-speed (0.55×)
+        assert rep.makespan >= 64 * 2e-4 / 0.55 / 16
+
+    def test_subset_job_mixed_types(self):
+        from repro.runtime import SimCluster, SimJobSpec
+
+        cl = SimCluster(HYBRID_PE)
+        cl.add_job(SimJobSpec(name="mix", graph=_wide_graph(n=40),
+                              policy="busy", cpus=[6, 7, 8, 9]))
+        rep = cl.run()["mix"]
+        assert set(rep.state_seconds_by_type) == {"P", "E"}
+
+    def test_borrowed_core_billed_with_machine_type(self):
+        """DLB on an asymmetric machine: a core borrowed across the
+        type boundary is announced with its *machine* identity, so the
+        borrower bills it under the right type and power."""
+        from repro.core import ResourceBroker
+        from repro.runtime import SimCluster, SimJobSpec
+
+        broker = ResourceBroker()
+        cl = SimCluster(HYBRID_PE, broker=broker)
+        # jobs split along the type boundary: "p-job" owns the P cores
+        # and finishes long after "e-job", so it borrows E cores
+        cl.add_job(SimJobSpec(name="p-job", graph=_wide_graph(n=400),
+                              policy="dlb-lewi", cpus=list(range(8))))
+        cl.add_job(SimJobSpec(name="e-job", graph=_wide_graph(n=10),
+                              policy="dlb-lewi", cpus=list(range(8, 24))))
+        reports = cl.run()
+        by_type = reports["p-job"].state_seconds_by_type
+        assert "E" in by_type          # borrowed E cores billed as E
+        assert by_type["E"]["active"] > 0
+
+    def test_plain_policies_work_on_asymmetric_machines(self):
+        # every registered non-sharing policy must run on a hetero preset
+        for policy in ("busy", "idle", "hybrid", "prediction"):
+            spec = GovernorSpec(resources=HYBRID_PE.n_cores, policy=policy,
+                                monitoring=True)
+            rep = SimExecutor(HYBRID_PE, spec=spec).run(_wide_graph(n=60))
+            assert rep.tasks_completed == 60
+            assert set(rep.state_seconds_by_type) == {"P", "E"}
+
+
+class TestEnergyMeterFrequency:
+    def test_cubic_power_scaling(self):
+        pm = PowerModel()
+        assert pm.power(CoreState.ACTIVE, 1.0) == 1.0
+        assert pm.power(CoreState.ACTIVE, 0.5) == \
+            pytest.approx(0.1 + 0.9 * 0.125)
+        # idle/off power is static — no frequency scaling
+        assert pm.power(CoreState.IDLE, 0.5) == 0.1
+        assert pm.power(CoreState.OFF, 0.5) == 0.0
+
+    def test_meter_integrates_frequency_segments(self):
+        em = EnergyMeter(1)
+        em.set_state(0, CoreState.ACTIVE, 0.0)
+        em.set_frequency(0, 0.5, 1.0)   # 1s at q=1, then 1s at q=0.5
+        em.finish(2.0)
+        expected = 1.0 * 1.0 + 1.0 * (0.1 + 0.9 * 0.125)
+        assert em.energy() == pytest.approx(expected)
+        assert em.state_seconds()[CoreState.ACTIVE] == pytest.approx(2.0)
+
+    def test_per_core_power_models(self):
+        em = EnergyMeter(0)
+        em.add_core(0, CoreState.SPIN, 0.0, core_type="P")
+        em.add_core(1, CoreState.SPIN, 0.0,
+                    power=PowerModel(active=0.4, spin=0.4), core_type="E")
+        em.finish(1.0)
+        by_type = em.energy_by_type()
+        assert by_type["P"] == pytest.approx(1.0)
+        assert by_type["E"] == pytest.approx(0.4)

@@ -1,0 +1,137 @@
+"""WorkerManager mechanics: the unified poll/reevaluate transition path
+and the energy-timeline close on borrowed-CPU removal."""
+
+from repro.core.energy import CoreState, EnergyMeter
+from repro.core.manager import WorkerManager, WorkerState
+from repro.core.monitoring import TaskMonitor
+from repro.core.policies import BusyPolicy, PollDecision, PredictionPolicy
+from repro.core.prediction import CPUPredictor, PredictionConfig
+from repro.core.sharing import LeWIPolicy
+
+
+class _Clock:
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _prediction_policy(delta: int, n: int = 8) -> PredictionPolicy:
+    m = TaskMonitor(min_samples=1)
+    for i in range(3):
+        m.on_task_ready(i, "t", 1.0)
+        m.on_task_execute(i, "t", 1.0)
+        m.on_task_completed(i, "t", 1.0, 50e-6)
+    for i in range(delta):
+        m.on_task_ready(100 + i, "t", 1.0)
+    pred = CPUPredictor(m, n_cpus=n, config=PredictionConfig(
+        rate_s=50e-6, min_samples=1))
+    pred.tick()
+    assert pred.delta == delta
+    return PredictionPolicy(pred)
+
+
+class TestRemoveWorkerEnergy:
+    def test_removed_borrowed_core_stops_accruing(self):
+        """A reclaimed borrowed CPU must stop burning SPIN power the
+        moment it is removed — not at finish()."""
+        clock = _Clock()
+        energy = EnergyMeter(0)
+        mgr = WorkerManager(0, BusyPolicy(), clock=clock, energy=energy,
+                            worker_ids=[])
+        mgr.add_worker(7)             # borrowed CPU arrives, spinning
+        clock.t = 1.0
+        mgr.remove_worker(7)          # owner reclaimed it
+        clock.t = 5.0
+        energy.finish(5.0)
+        acc = energy.state_seconds()
+        assert acc[CoreState.SPIN] == 1.0     # not 5.0
+        assert acc[CoreState.OFF] == 4.0
+        assert energy.energy() == 1.0         # spin power only while held
+
+    def test_reborrowed_core_keeps_prior_accounting(self):
+        """Borrow → return → borrow again must accumulate across both
+        windows (re-registration used to wipe the timeline)."""
+        clock = _Clock()
+        energy = EnergyMeter(0)
+        mgr = WorkerManager(0, BusyPolicy(), clock=clock, energy=energy,
+                            worker_ids=[])
+        mgr.add_worker(7)
+        clock.t = 1.0
+        mgr.remove_worker(7)
+        clock.t = 3.0
+        mgr.add_worker(7)             # same CPU borrowed again
+        clock.t = 4.0
+        mgr.remove_worker(7)
+        energy.finish(5.0)
+        acc = energy.state_seconds()
+        assert acc[CoreState.SPIN] == 2.0     # both borrow windows
+        assert acc[CoreState.OFF] == 3.0
+        assert energy.energy() == 2.0
+
+    def test_remove_unknown_worker_is_noop(self):
+        clock = _Clock()
+        mgr = WorkerManager(2, BusyPolicy(), clock=clock,
+                            energy=EnergyMeter(2))
+        mgr.remove_worker(99)         # never added: no KeyError, no write
+        assert mgr.n_workers == 2
+
+
+class TestUnifiedTransitionPath:
+    def test_reevaluate_lend_resets_spin_counts(self):
+        """The LEND branch of reevaluate_spinners used to skip the
+        spin-count reset that poll_empty performs."""
+        clock = _Clock()
+        mgr = WorkerManager(2, LeWIPolicy(), clock=clock)
+        mgr._spin_counts[0] = 42      # simulate prior empty polls
+        mgr._spin_counts[1] = 17
+        parked = mgr.reevaluate_spinners()
+        assert sorted(parked) == [0, 1]
+        assert mgr.state(0) is WorkerState.LENT
+        assert mgr._spin_counts[0] == 0
+        assert mgr._spin_counts[1] == 0
+
+    def test_reevaluate_idle_counts_transitions(self):
+        clock = _Clock()
+        mgr = WorkerManager(4, _prediction_policy(delta=2), clock=clock)
+        parked = mgr.reevaluate_spinners()
+        # δ=4 spinners against Δ=2: two idle transitions, both counted
+        assert len(parked) == 2
+        assert mgr.idles == 2
+        assert all(mgr._spin_counts[w] == 0 for w in parked)
+
+    def test_poll_and_reevaluate_agree(self):
+        """Both paths run the same helper: identical state, counters and
+        spin counts for the same decision."""
+        clock = _Clock()
+        via_poll = WorkerManager(1, LeWIPolicy(), clock=clock)
+        via_poll.poll_empty(0, spin_count_override=9)
+        via_reeval = WorkerManager(1, LeWIPolicy(), clock=clock)
+        via_reeval._spin_counts[0] = 9
+        via_reeval.reevaluate_spinners()
+        assert via_poll.states() == via_reeval.states()
+        assert via_poll._spin_counts == via_reeval._spin_counts
+        assert via_poll.idles == via_reeval.idles
+
+    def test_poll_empty_idle_still_counts(self):
+        clock = _Clock()
+        mgr = WorkerManager(4, _prediction_policy(delta=2), clock=clock)
+        assert mgr.poll_empty(0) is PollDecision.IDLE
+        assert mgr.idles == 1
+        assert mgr.state(0) is WorkerState.IDLE
+
+
+class TestActiveByType:
+    def test_counts_split_per_type(self):
+        clock = _Clock()
+        mgr = WorkerManager(4, BusyPolicy(), clock=clock,
+                            core_type_of=lambda w: "P" if w < 2 else "E")
+        mgr.task_started(0)
+        assert mgr.active_by_type() == {"P": 2, "E": 2}
+        mgr.poll_empty(2)             # busy: stays SPIN, still active
+        assert mgr.active_by_type() == {"P": 2, "E": 2}
+
+    def test_empty_without_mapping(self):
+        mgr = WorkerManager(2, BusyPolicy(), clock=_Clock())
+        assert mgr.active_by_type() == {}

@@ -80,6 +80,26 @@ class TestAlgorithm2:
         assert sorted(woken) == [0, 1]
         assert mgr.resumes == 2
 
+    def test_target_capped_at_owned_resources(self):
+        """Regression: an oversubscribing predictor (the DLB Alg.-1
+        variant) must not let a non-sharing pull-style frontend scale
+        beyond what it owns."""
+        m = TaskMonitor(min_samples=1)
+        for i in range(3):
+            m.on_task_ready(i, "t", 1.0)
+            m.on_task_execute(i, "t", 1.0)
+            m.on_task_completed(i, "t", 1.0, 50e-6)
+        for i in range(10):                     # Δ would be 10
+            m.on_task_ready(100 + i, "t", 1.0)
+        pred = CPUPredictor(m, n_cpus=4, config=PredictionConfig(
+            rate_s=50e-6, min_samples=1, allow_oversubscription=True,
+            oversubscription_cap=4.0))
+        pred.tick()
+        assert pred.delta == 10                 # oversubscribed Δ
+        pol = PredictionPolicy(pred)
+        assert pol.target(queued=10, active=0, n_resources=4) == 4
+        assert pol.target(queued=0, active=0, n_resources=4) == 0
+
 
 @given(active=st.integers(0, 64), idle=st.integers(0, 64),
        ready=st.integers(0, 256), delta=st.integers(1, 64))

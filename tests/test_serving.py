@@ -71,3 +71,27 @@ def test_autoscaler_policies_differ():
     assert busy.target(0, 0) == 4
     assert idle.target(0, 0) == 0
     assert idle.target(2, 1) == 3
+
+
+def test_autoscaler_never_exceeds_max_replicas_when_oversubscribed():
+    """Regression: a prediction stack configured with the DLB-style
+    oversubscribing Alg. 1 must still cap the serving target at the
+    replicas the deployment owns."""
+    from repro.core.governor import GovernorSpec
+    from repro.core.monitoring import TaskMonitor
+    from repro.core.prediction import PredictionConfig
+
+    monitor = TaskMonitor(min_samples=1)
+    scaler = AutoScaler(monitor, max_replicas=4, spec=GovernorSpec(
+        resources=4, policy="prediction", monitoring=True,
+        prediction=PredictionConfig(min_samples=1, rate_s=50e-6,
+                                    allow_oversubscription=True,
+                                    oversubscription_cap=4.0)))
+    for i in range(3):
+        monitor.on_task_ready(i, "req", 1.0)
+        monitor.on_task_execute(i, "req", 1.0)
+        monitor.on_task_completed(i, "req", 1.0, 50e-6)
+    for i in range(12):                    # far more work than replicas
+        monitor.on_task_ready(100 + i, "req", 1.0)
+    assert scaler.predictor.compute_delta() > 4   # Δ oversubscribes...
+    assert scaler.target(12, 0) == 4              # ...the target cannot

@@ -49,6 +49,33 @@ class TestBroker:
         assert b.job_calls("b") == 2
         assert b.total_calls == 3
 
+    def test_return_cpu_keeps_pending_reclaim_wanted(self):
+        """Regression: returning ONE of several flagged CPUs must not
+        clear the owner's reclaim_wanted while other lent CPUs still
+        carry return flags — that silently dropped multi-CPU reclaims."""
+        b = _broker2()
+        b.lend("a", 0)
+        b.lend("a", 1)
+        assert sorted(b.acquire("b", 2)) == [0, 1]
+        assert b.reclaim("a") == []          # both borrowed: flagged
+        assert b.cpu_must_return(0) and b.cpu_must_return(1)
+        assert b.return_cpu("b", 0) == "a"
+        # cpu 1 is still flagged ⇒ the reclaim must stay wanted
+        assert b._jobs["a"].reclaim_wanted
+        # ...so b's next lend of cpu 1 hands it straight to the owner
+        assert b.lend("b", 1) == "a"
+        assert b.holder(1) == "a"
+        # nothing pending anymore
+        assert not b._jobs["a"].reclaim_wanted
+
+    def test_return_last_flagged_cpu_clears_reclaim_wanted(self):
+        b = _broker2()
+        b.lend("a", 0)
+        assert b.acquire("b", 1) == [0]
+        b.reclaim("a")
+        b.return_cpu("b", 0)
+        assert not b._jobs["a"].reclaim_wanted
+
     @given(st.lists(st.tuples(st.sampled_from(["lend_a", "lend_b",
                                                "acq_a", "acq_b"]),
                               st.integers(0, 7)),
@@ -70,6 +97,71 @@ class TestBroker:
             holders = [b.holder(c) for c in range(8)]
             assert all(h in ("a", "b", "") for h in holders)
             assert b.pool_size() == sum(1 for h in holders if h == "")
+
+
+def _check_invariants(b: ResourceBroker) -> None:
+    """Full-state broker invariants (the property tests' oracle):
+
+    * every CPU has exactly one holder — a registered job or the pool;
+    * a CPU is in the pool iff its holder is "";
+    * ``lent``/``borrowed`` stay disjoint and mutually consistent:
+      ``cpu ∈ owner.lent``  ⟺ someone else (or the pool) holds it,
+      ``cpu ∈ job.borrowed`` ⟺ job holds a CPU it does not own.
+    """
+    jobs = b._jobs
+    for cpu, owner in b._owner.items():
+        holder = b.holder(cpu)
+        assert holder == "" or holder in jobs
+        assert (holder == "") == (cpu in b._pool)
+        assert (cpu in jobs[owner].lent) == (holder != owner)
+        for name, acct in jobs.items():
+            assert not (acct.owned & acct.borrowed)
+            assert (cpu in acct.borrowed) == \
+                (holder == name and owner != name)
+    assert len(b._pool) == len(set(b._pool))      # no duplicates
+
+
+class TestBrokerInvariants:
+    """Property-style interleavings over all four broker verbs."""
+
+    OPS = ["lend_a", "lend_b", "acq_a", "acq_b", "reclaim_a", "reclaim_b",
+           "ret_a", "ret_b"]
+
+    @staticmethod
+    def _apply(b: ResourceBroker, op: str, cpu: int) -> None:
+        job = "a" if op.endswith("_a") else "b"
+        if op.startswith("lend"):
+            # lending is only legal for a CPU the job actually runs on
+            if b.holder(cpu) == job:
+                b.lend(job, cpu)
+        elif op.startswith("acq"):
+            b.acquire(job, 1 + cpu % 3)
+        elif op.startswith("reclaim"):
+            b.reclaim(job)
+        else:   # cooperative return at a task boundary
+            if cpu in b._jobs[job].borrowed and b.cpu_must_return(cpu):
+                b.return_cpu(job, cpu)
+
+    @given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 7)),
+                    max_size=80))
+    @settings(max_examples=200, deadline=None)
+    def test_random_interleavings_hold_invariants(self, ops):
+        b = _broker2()
+        for op, cpu in ops:
+            self._apply(b, op, cpu)
+            _check_invariants(b)
+
+    def test_deterministic_interleaving(self):
+        """A fixed dense sequence so the invariants run even without
+        hypothesis installed."""
+        b = _broker2()
+        seq = [("lend_a", 0), ("lend_a", 1), ("acq_b", 0), ("reclaim_a", 0),
+               ("ret_b", 0), ("lend_b", 1), ("lend_b", 4), ("acq_a", 2),
+               ("reclaim_b", 0), ("ret_a", 4), ("lend_a", 2), ("acq_b", 1),
+               ("reclaim_a", 0), ("ret_b", 2), ("ret_b", 1), ("acq_a", 1)]
+        for op, cpu in seq:
+            self._apply(b, op, cpu)
+            _check_invariants(b)
 
 
 class TestSharingPolicies:
