@@ -23,7 +23,7 @@ import time
 from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
-            "roofline", "open_workloads", "heterogeneous"]
+            "roofline", "open_workloads", "heterogeneous", "multiapp"]
 
 CAPTIONS = {
     "accuracy": "(paper Table 2)",
@@ -32,6 +32,7 @@ CAPTIONS = {
     "overhead": "(paper §5)",
     "open_workloads": "(beyond-paper: arrival-driven load)",
     "heterogeneous": "(beyond-paper: asymmetric cores + DVFS)",
+    "multiapp": "(beyond-paper: N-app co-scheduling arbiter)",
 }
 
 

@@ -68,7 +68,16 @@ def save_checkpoint(directory, step: int, tree) -> pathlib.Path:
         "treedef": str(treedef),
         "shapes": [list(h.shape) for h in host],
         "dtypes": [dt for _, dt in stored],
-        "time": time.time(),
+        # Repo-wide clock convention: metric timestamps are monotonic
+        # (``time.perf_counter`` live, virtual time in the simulator) —
+        # wall clock can jump under NTP and cannot be compared against
+        # any other component's timeline.  ``time`` follows that
+        # convention (save-to-save intervals *within* a process); it is
+        # meaningless across restarts, so durable provenance keeps a
+        # separate, clearly-labelled wall-clock stamp that no metric
+        # ever consumes.
+        "time": time.perf_counter(),
+        "unix_time": time.time(),
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():

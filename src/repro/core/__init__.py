@@ -7,6 +7,8 @@ objects drive the threaded executor, the discrete-event simulator, and the
 distributed elastic controller / serving autoscaler.
 """
 
+from .arbiter import (AppPlan, AppShareStats, ClusterArbiter,
+                      MultiAppReport, jain_fairness)
 from .cost import CostClause, TaskTypeInfo, TaskTypeRegistry
 from .energy import CoreState, EnergyMeter, PowerModel
 from .events import EventBus, EventKind, RuntimeEvent
@@ -25,6 +27,8 @@ from .sharing import (DLBHybridPolicy, DLBPredictionPolicy, LeWIPolicy,
 from .topology import CoreTopology, CoreType
 
 __all__ = [
+    "AppPlan", "AppShareStats", "ClusterArbiter", "MultiAppReport",
+    "jain_fairness",
     "CostClause", "TaskTypeInfo", "TaskTypeRegistry",
     "CoreState", "EnergyMeter", "PowerModel",
     "EventBus", "EventKind", "RuntimeEvent",

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import enum
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Iterable, Mapping
 
 __all__ = ["EventKind", "RuntimeEvent", "EventBus"]
@@ -60,11 +60,18 @@ class RuntimeEvent:
     cost: float | None = None
     worker_id: int | None = None
     elapsed: float | None = None
+    #: application namespace for multi-app traces (co-scheduled jobs
+    #: share one machine but publish on per-app buses; the bus stamps
+    #: this so a combined recording can be split back per app).  None on
+    #: single-app frontends — the field round-trips through JSON only
+    #: when set, so existing traces stay byte-identical.
+    app: str | None = None
     data: Mapping[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict[str, Any]:
         d: dict[str, Any] = {"kind": self.kind.value, "time": self.time}
-        for k in ("task_id", "type_name", "cost", "worker_id", "elapsed"):
+        for k in ("task_id", "type_name", "cost", "worker_id", "elapsed",
+                  "app"):
             v = getattr(self, k)
             if v is not None:
                 d[k] = v
@@ -86,10 +93,16 @@ class EventBus:
     publisher's thread — handlers must be fast and must not call back
     into the publisher.  ``kinds`` filters at the bus so uninterested
     subscribers cost nothing per event.
+
+    ``app`` names the application this bus belongs to: published events
+    with no ``app`` of their own are stamped with it, which is what lets
+    a recorder attached to several per-app buses produce one splittable
+    multi-app trace.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, app: str | None = None) -> None:
         self._lock = threading.Lock()
+        self.app = app
         # Copy-on-write subscriber list: publish() iterates a snapshot
         # without holding the lock.
         self._subs: tuple[tuple[Callable[[RuntimeEvent], None],
@@ -99,19 +112,36 @@ class EventBus:
                   kinds: Iterable[EventKind] | None = None,
                   ) -> Callable[[RuntimeEvent], None]:
         """Register ``handler`` (for ``kinds``, or all); returns it so the
-        caller can later :meth:`unsubscribe` the same object."""
+        caller can later :meth:`unsubscribe` the same object.
+
+        Subscribing a handler that is already registered (equality, not
+        identity — bound methods compare equal by (function, instance))
+        does NOT add a second entry: it updates the existing entry's kind
+        filter.  Double delivery silently doubled every subscriber-side
+        aggregate (e.g. TaskMonitor costs), and was asymmetric with
+        :meth:`unsubscribe`.
+        """
         ks = frozenset(kinds) if kinds is not None else None
         with self._lock:
+            for i, (h, _) in enumerate(self._subs):
+                if h == handler:
+                    self._subs = (self._subs[:i] + ((handler, ks),)
+                                  + self._subs[i + 1:])
+                    return handler
             self._subs = self._subs + ((handler, ks),)
         return handler
 
     def unsubscribe(self, handler: Callable[[RuntimeEvent], None]) -> None:
         # Equality, not identity: each access to a bound method (e.g.
         # ``monitor._on_event``) builds a fresh object, and bound methods
-        # compare equal by (function, instance).
+        # compare equal by (function, instance).  Removes exactly the one
+        # matching entry — subscribe() guarantees there is at most one —
+        # keeping the pair symmetric (one subscribe ⟺ one unsubscribe).
         with self._lock:
-            self._subs = tuple((h, k) for h, k in self._subs
-                               if h != handler)
+            for i, (h, _) in enumerate(self._subs):
+                if h == handler:
+                    self._subs = self._subs[:i] + self._subs[i + 1:]
+                    return
 
     @property
     def n_subscribers(self) -> int:
@@ -125,6 +155,8 @@ class EventBus:
         return any(ks is None or kind in ks for _, ks in self._subs)
 
     def publish(self, event: RuntimeEvent) -> None:
+        if self.app is not None and event.app is None:
+            event = replace(event, app=self.app)
         for handler, kinds in self._subs:
             if kinds is None or event.kind in kinds:
                 handler(event)

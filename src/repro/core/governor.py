@@ -78,13 +78,18 @@ class PolicyEntry:
     #: the policy plans per core type: the governor synthesizes a
     #: single-type :class:`CoreTopology` when the spec carries none
     needs_topology: bool = False
+    #: for sharing policies: the registered non-sharing policy that
+    #: behaves identically when the app runs alone (no co-tenants to
+    #: trade CPUs with) — the arbiter runs fairness baselines under it
+    solo_equivalent: str | None = None
 
 
 _REGISTRY: dict[str, PolicyEntry] = {}
 
 
 def register_policy(name: str, *, needs_predictor: bool = False,
-                    sharing: bool = False, needs_topology: bool = False):
+                    sharing: bool = False, needs_topology: bool = False,
+                    solo_equivalent: str | None = None):
     """Decorator registering ``factory(spec, predictor) -> Policy``.
 
     Downstream code adds policies without touching core::
@@ -97,7 +102,8 @@ def register_policy(name: str, *, needs_predictor: bool = False,
         _REGISTRY[name] = PolicyEntry(name=name, factory=factory,
                                       needs_predictor=needs_predictor,
                                       sharing=sharing,
-                                      needs_topology=needs_topology)
+                                      needs_topology=needs_topology,
+                                      solo_equivalent=solo_equivalent)
         return factory
     return deco
 
@@ -149,19 +155,20 @@ def _hetero_prediction(spec: "GovernorSpec",
     return HeteroPredictionPolicy(predictor)
 
 
-@register_policy("dlb-lewi", sharing=True)
+@register_policy("dlb-lewi", sharing=True, solo_equivalent="idle")
 def _dlb_lewi(spec: "GovernorSpec",
               predictor: CPUPredictor | None) -> Policy:
     return LeWIPolicy()
 
 
-@register_policy("dlb-hybrid", sharing=True)
+@register_policy("dlb-hybrid", sharing=True, solo_equivalent="hybrid")
 def _dlb_hybrid(spec: "GovernorSpec",
                 predictor: CPUPredictor | None) -> Policy:
     return DLBHybridPolicy(spin_budget=spec.spin_budget)
 
 
-@register_policy("dlb-prediction", needs_predictor=True, sharing=True)
+@register_policy("dlb-prediction", needs_predictor=True, sharing=True,
+                 solo_equivalent="prediction")
 def _dlb_prediction(spec: "GovernorSpec",
                     predictor: CPUPredictor | None) -> Policy:
     assert predictor is not None
@@ -210,6 +217,14 @@ class GovernorSpec:
     #: fastest cores first); "fast-first" parks the fast cores first
     #: ("park the P-cores last" vs "park the E-cores last")
     park_order: str = "slow-first"
+    #: co-scheduling arbiter: only borrow foreign cores whose type speed
+    #: is ≥ this fraction of the app's slowest *owned* core.  The
+    #: default 1.0 ("never borrow silicon slower than your own") keeps
+    #: barrier-bound apps from diluting their critical path with slow
+    #: cores while still letting slow-core owners borrow fast ones; it
+    #: is a no-op on homogeneous machines (all speeds equal).  0.0
+    #: accepts any core (pure throughput apps).
+    min_borrow_speed: float = 1.0
     #: extra kwargs for custom registered policy factories
     policy_params: Mapping[str, Any] = field(default_factory=dict)
 
@@ -224,6 +239,10 @@ class GovernorSpec:
             raise ValueError(
                 f"park_order must be 'slow-first' or 'fast-first', "
                 f"got {self.park_order!r}")
+        if self.min_borrow_speed < 0.0:
+            raise ValueError(
+                f"min_borrow_speed must be >= 0, "
+                f"got {self.min_borrow_speed}")
         if (self.topology is not None
                 and self.topology.n_cores != self.resources):
             raise ValueError(
@@ -286,6 +305,9 @@ class GovernorReport:
         default_factory=dict)
     #: last recommended DVFS step per core type ({} without predictions)
     freq_by_type: dict[str, float] = field(default_factory=dict)
+    #: CPU-flow counters from the co-scheduling arbiter
+    #: (lends/acquired/returns/reclaims; {} outside arbitrated runs)
+    sharing: dict[str, int] = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -559,7 +581,8 @@ class ResourceGovernor:
 
     def report(self, *, name: str = "", makespan: float | None = None,
                tasks_fallback: int = 0, dlb_calls: int = 0,
-               monitor_events: int = 0) -> GovernorReport:
+               monitor_events: int = 0,
+               sharing: Mapping[str, int] | None = None) -> GovernorReport:
         """Assemble the unified report (``finish()`` must have run)."""
         energy_meter = self.energy
         if energy_meter is None:
@@ -594,4 +617,5 @@ class ResourceGovernor:
             freq_by_type=(self.predictor.freq_by_type
                           if self.predictor is not None
                           and not self._topology_synthesized else {}),
+            sharing=dict(sharing) if sharing else {},
         )

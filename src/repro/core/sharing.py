@@ -16,14 +16,31 @@ strategies evaluated by the paper:
   the runtime owns.
 
 Every :meth:`ResourceBroker.lend` / :meth:`ResourceBroker.acquire` /
-:meth:`ResourceBroker.reclaim` invocation increments the per-job *DLB call*
-counter — the cost metric of paper Table 3.
+:meth:`ResourceBroker.reclaim` invocation that actually reaches the broker
+increments the per-job *DLB call* counter — the cost metric of paper
+Table 3.  An ``acquire`` with ``max_n <= 0`` never leaves the caller (no
+DLB library call would be issued), so it is not counted.
+
+Multiprogramming (N ≥ 2 jobs): foreign CPUs are rationed with a
+least-recently-served reservation — a claimant whose last acquisition
+came up short registers its unmet demand, and better-served claimants
+must leave that many foreign CPUs in the pool.  Without it, whichever
+borrower's tick happens to fire first drains the pool every round and
+can starve a third job indefinitely.
+
+On heterogeneous machines the broker can be taught each CPU's core type
+(:meth:`ResourceBroker.set_core_type_of`): the pool is then accountable
+per type (:meth:`pool_by_type`) and ``acquire`` accepts a ``core_type``
+filter, so a P-core lent is never silently handed back as an E-core
+grant.
 """
 
 from __future__ import annotations
 
+import itertools
 import threading
 from dataclasses import dataclass, field
+from typing import Callable
 
 from .policies import Policy, PollDecision
 from .prediction import CPUPredictor
@@ -45,6 +62,11 @@ class _JobAccount:
     borrowed: set[int] = field(default_factory=set)  # others' CPUs we run on
     calls: int = 0                                   # DLB call counter
     reclaim_wanted: bool = False
+    #: unmet demand from the last acquire (foreign-claimant fairness):
+    #: while > 0, better-served claimants leave this many CPUs in the pool
+    waiting: int = 0
+    #: monotonic stamp of the last *foreign* CPU grant; 0 = never served
+    last_served: int = 0
 
 
 class ResourceBroker:
@@ -55,13 +77,16 @@ class ResourceBroker:
     executor calls :meth:`cpu_must_return` to learn this).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, core_type_of: Callable[[int], str] | None = None,
+                 ) -> None:
         self._lock = threading.Lock()
         self._jobs: dict[str, _JobAccount] = {}
         self._pool: list[int] = []          # lent, unborrowed CPUs
         self._owner: dict[int, str] = {}    # cpu -> owning job
         self._holder: dict[int, str] = {}   # cpu -> job currently running on it
         self._return_flags: set[int] = set()
+        self._type_of = core_type_of
+        self._serve_stamp = itertools.count(1)
         self.total_calls = 0
 
     # -- registration --------------------------------------------------------
@@ -74,13 +99,40 @@ class ResourceBroker:
                 self._owner[c] = name
                 self._holder[c] = name
 
+    def set_core_type_of(self, fn: Callable[[int], str] | None) -> None:
+        """Teach the broker each CPU's core type (heterogeneous machines)
+        so pool accounting and ``acquire(core_type=...)`` filters work
+        per type.  ``None`` reverts to untyped (homogeneous) mode."""
+        with self._lock:
+            self._type_of = fn
+
+    @property
+    def typed(self) -> bool:
+        """True when the broker knows core types (see
+        :meth:`set_core_type_of`)."""
+        return self._type_of is not None
+
+    def _ct(self, cpu: int) -> str:
+        return self._type_of(cpu) if self._type_of is not None else ""
+
     def job_calls(self, name: str) -> int:
         with self._lock:
             return self._jobs[name].calls
 
-    def pool_size(self) -> int:
+    def pool_size(self, core_type: str | None = None) -> int:
         with self._lock:
-            return len(self._pool)
+            if core_type is None:
+                return len(self._pool)
+            return sum(1 for c in self._pool if self._ct(c) == core_type)
+
+    def pool_by_type(self) -> dict[str, int]:
+        """Pool composition per core type ({""; n} when untyped)."""
+        with self._lock:
+            out: dict[str, int] = {}
+            for c in self._pool:
+                ct = self._ct(c)
+                out[ct] = out.get(ct, 0) + 1
+            return out
 
     # -- the three DLB verbs ---------------------------------------------------
 
@@ -94,6 +146,9 @@ class ResourceBroker:
             acct = self._jobs[job]
             acct.calls += 1
             self.total_calls += 1
+            # Lending is a surplus signal: any outstanding unmet demand
+            # this job registered is stale, so stop reserving for it.
+            acct.waiting = 0
             if cpu in acct.borrowed:
                 # Returning someone else's CPU.
                 acct.borrowed.discard(cpu)
@@ -119,22 +174,43 @@ class ResourceBroker:
             self._return_flags.discard(cpu)
             return ""
 
-    def acquire(self, job: str, max_n: int) -> list[int]:
+    def acquire(self, job: str, max_n: int,
+                core_type: str | None = None) -> list[int]:
         """Job asks the broker for up to ``max_n`` CPUs (1 DLB call).
 
+        ``max_n <= 0`` is a caller-side no-op: it returns immediately and
+        is NOT counted as a DLB call (it would never reach the library),
+        so Table-3 cost metrics only count real broker traffic.
+
+        ``core_type`` restricts the grant to CPUs of that type (typed
+        brokers only — see :meth:`set_core_type_of`).
+
         Preference order: the job's own lent CPUs first (cheap reclaim),
-        then foreign CPUs from the pool.
+        then foreign CPUs in pool (FIFO) order — minus a reservation for
+        less-recently-served claimants with outstanding unmet demand, the
+        round-robin discipline that stops one borrower from draining the
+        pool ahead of a starving third job every round.
         """
+        if max_n <= 0:
+            return []
         with self._lock:
             acct = self._jobs[job]
             acct.calls += 1
             self.total_calls += 1
             got: list[int] = []
-            if max_n <= 0 or not self._pool:
-                return got
-            own_first = sorted(self._pool,
-                               key=lambda c: self._owner[c] != job)
-            for cpu in own_first:
+            own: list[int] = []
+            foreign: list[int] = []
+            for c in self._pool:
+                if core_type is not None and self._ct(c) != core_type:
+                    continue
+                (own if self._owner[c] == job else foreign).append(c)
+            # Foreign-claimant fairness: demand registered by claimants
+            # served less recently than us stays in the pool.
+            reserved = sum(a.waiting for n, a in self._jobs.items()
+                           if n != job and a.waiting > 0
+                           and a.last_served < acct.last_served)
+            foreign = foreign[:max(0, len(foreign) - reserved)]
+            for cpu in own + foreign:
                 if len(got) >= max_n:
                     break
                 self._pool.remove(cpu)
@@ -144,6 +220,9 @@ class ResourceBroker:
                 else:
                     acct.borrowed.add(cpu)
                 got.append(cpu)
+            if any(self._owner[c] != job for c in got):
+                acct.last_served = next(self._serve_stamp)
+            acct.waiting = max_n - len(got)
             return got
 
     def reclaim(self, job: str) -> list[int]:
@@ -174,6 +253,25 @@ class ResourceBroker:
         with self._lock:
             return cpu in self._return_flags
 
+    def reclaim_pending(self, job: str) -> bool:
+        """True while an earlier :meth:`reclaim` still has return flags
+        outstanding — re-issuing the reclaim would set no new flag, so
+        arbiters use this to avoid paying for redundant DLB calls."""
+        with self._lock:
+            return self._jobs[job].reclaim_wanted
+
+    def register_demand(self, job: str, n: int) -> None:
+        """Record ``job``'s current unmet CPU demand for the
+        foreign-claimant fairness reservation *without* a DLB call — in
+        a real DLB deployment this is a shared-memory counter write, not
+        a library round-trip.  Arbiters call it when the cheap free-CPU
+        peek suppresses an acquisition (a starved app would otherwise
+        never register the claim that reserves CPUs for it) and with 0
+        when the app's demand evaporates (done, or satisfied through a
+        reclaim), so stale reservations cannot park pooled CPUs."""
+        with self._lock:
+            self._jobs[job].waiting = max(0, n)
+
     def return_cpu(self, borrower: str, cpu: int) -> str:
         """Borrower hands a flagged CPU back; returns the owner job name."""
         with self._lock:
@@ -194,11 +292,12 @@ class ResourceBroker:
         with self._lock:
             return self._holder[cpu]
 
-    def lent_out(self, job: str) -> int:
+    def lent_out(self, job: str, core_type: str | None = None) -> int:
         """How many of ``job``'s owned CPUs another job is running on."""
         with self._lock:
             return sum(1 for c in self._jobs[job].lent
-                       if self._holder.get(c) not in ("", job))
+                       if self._holder.get(c) not in ("", job)
+                       and (core_type is None or self._ct(c) == core_type))
 
 
 # ---------------------------------------------------------------------------

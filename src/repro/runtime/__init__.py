@@ -8,10 +8,12 @@ from .scheduler import Scheduler
 from .thread_executor import ThreadExecutor, ExecutorReport
 from .machine import MachineModel, MN4, KNL, HYBRID_PE, DVFS2
 from .sim import SimExecutor, SimJobSpec, SimReport, SimCluster
+from .multiapp import run_multi_app, solo_job_spec
 
 __all__ = [
     "Task", "TaskGraph", "Scheduler",
     "ThreadExecutor", "ExecutorReport",
     "MachineModel", "MN4", "KNL", "HYBRID_PE", "DVFS2",
     "SimExecutor", "SimJobSpec", "SimReport", "SimCluster",
+    "run_multi_app", "solo_job_spec",
 ]

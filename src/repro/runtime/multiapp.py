@@ -1,0 +1,97 @@
+"""Multi-application co-scheduling frontend (multiprogramming).
+
+:func:`run_multi_app` is the one-call entry point for the scenario the
+paper's §2/§3.3 sharing story implies but the repo never had: N
+applications — each with its own policy, monitor/predictor and arrival
+process — co-scheduled on ONE machine through the
+:class:`~repro.core.sharing.ResourceBroker`, with the
+:class:`~repro.core.arbiter.ClusterArbiter` redistributing cores from
+per-app predictions.  The result is a
+:class:`~repro.core.arbiter.MultiAppReport`: per-app
+:class:`~repro.core.governor.GovernorReport`\\ s plus cluster-level
+fairness metrics (per-app slowdown vs. a solo run on the same CPU
+partition, Jain fairness, aggregate EDP, total DLB calls).
+
+Solo baselines: task graphs are single-use (the scheduler mutates task
+state), so callers wanting slowdown metrics pass ``solo_graphs`` — a
+second, freshly-built copy of each app's graph.  Each baseline runs
+alone on the app's own CPU partition under the policy's registered
+``solo_equivalent`` (dlb-lewi → idle, dlb-hybrid → hybrid,
+dlb-prediction → prediction): a sharing policy with no co-tenant would
+deadlock its lent CPUs, and the paper's "Single" configuration idles
+unused CPUs too.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Iterable, Mapping
+
+from ..core.arbiter import MultiAppReport
+from ..core.governor import GovernorReport, policy_entry
+from ..core.sharing import ResourceBroker
+from .machine import MachineModel
+from .sim import SimCluster, SimJobSpec
+from .task import TaskGraph
+
+__all__ = ["run_multi_app", "solo_job_spec"]
+
+
+def solo_job_spec(spec: SimJobSpec, graph: TaskGraph) -> SimJobSpec:
+    """``spec`` rewritten for a solo (fairness-baseline) run: fresh
+    ``graph``, sharing policy swapped for its registry-declared solo
+    equivalent, private bus."""
+    if spec.governor is not None:
+        entry = policy_entry(spec.governor.policy)
+        gov = (replace(spec.governor, policy=entry.solo_equivalent)
+               if entry.solo_equivalent else spec.governor)
+        return replace(spec, graph=graph, governor=gov, bus=None)
+    entry = policy_entry(spec.policy)
+    solo_policy = entry.solo_equivalent or spec.policy
+    return replace(spec, graph=graph, policy=solo_policy, bus=None)
+
+
+def run_multi_app(machine: MachineModel, specs: Iterable[SimJobSpec], *,
+                  broker: ResourceBroker | None = None,
+                  solo_graphs: Mapping[str, TaskGraph] | None = None,
+                  ) -> MultiAppReport:
+    """Co-schedule ``specs`` on ``machine`` through one broker/arbiter.
+
+    Every spec must pin its CPU partition (``spec.cpus``) — silent
+    overlapping defaults are exactly the class of bug multiprogramming
+    runs cannot afford.  ``solo_graphs`` (app name → fresh graph copy)
+    enables the slowdown/fairness metrics; apps without an entry simply
+    have no baseline.
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("run_multi_app needs at least one SimJobSpec")
+    seen: set[int] = set()
+    for spec in specs:
+        if spec.cpus is None:
+            raise ValueError(
+                f"app {spec.name!r} has no cpus: multi-app runs require "
+                "explicit, disjoint CPU partitions")
+        overlap = seen & set(spec.cpus)
+        if overlap:
+            raise ValueError(
+                f"app {spec.name!r} overlaps already-assigned cpus "
+                f"{sorted(overlap)[:5]}")
+        seen |= set(spec.cpus)
+    if broker is None:
+        broker = ResourceBroker()
+    cluster = SimCluster(machine, broker=broker)
+    for spec in specs:
+        cluster.add_job(spec)
+    reports = cluster.run()
+
+    solo: dict[str, GovernorReport] = {}
+    if solo_graphs:
+        for spec in specs:
+            graph = solo_graphs.get(spec.name)
+            if graph is None:
+                continue
+            solo_cluster = SimCluster(machine)
+            solo_cluster.add_job(solo_job_spec(spec, graph))
+            solo[spec.name] = solo_cluster.run()[spec.name]
+    return MultiAppReport.build(reports, broker.total_calls, solo or None)

@@ -33,6 +33,7 @@ import itertools
 from dataclasses import dataclass, replace
 from typing import Any
 
+from ..core.arbiter import AppPlan, ClusterArbiter
 from ..core.energy import PowerModel
 from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
@@ -40,7 +41,7 @@ from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
 from ..core.manager import WorkerState
 from ..core.policies import PollDecision
 from ..core.prediction import DEFAULT_PREDICTION_RATE_S, PredictionConfig
-from ..core.sharing import ResourceBroker, SharingPolicy
+from ..core.sharing import ResourceBroker
 from ..core.topology import CoreTopology
 from ..workloads.arrivals import ArrivalProcess
 from .machine import MachineModel
@@ -108,7 +109,12 @@ class _SimJob:
         self.spec = spec
         self.name = spec.name
         self.graph = spec.graph
-        self.bus = spec.bus if spec.bus is not None else EventBus()
+        # A job-private bus is namespaced with the job name, so a trace
+        # recorder attached to several jobs' buses yields one combined,
+        # per-app-splittable multi-app trace.  An externally provided
+        # bus keeps whatever namespace its creator chose.
+        self.bus = spec.bus if spec.bus is not None \
+            else EventBus(app=spec.name)
         gspec = spec.governor_spec(len(cpus))
         machine = cluster.machine
         if machine.core_types is not None and gspec.topology is None:
@@ -176,6 +182,16 @@ class SimCluster:
                  broker: ResourceBroker | None = None) -> None:
         self.machine = machine
         self.broker = broker
+        self.arbiter: ClusterArbiter | None = None
+        if broker is not None:
+            topo = None
+            if machine.core_types is not None:
+                # per-core-type pool accounting: a P-core lent must not
+                # come back as an E-core grant
+                if not broker.typed:
+                    broker.set_core_type_of(machine.topology().type_of)
+                topo = machine.topology()
+            self.arbiter = ClusterArbiter(broker, topology=topo)
         self.now = 0.0
         self._heap: list[tuple[float, int, int, Any]] = []
         self._seq = itertools.count()
@@ -192,6 +208,8 @@ class SimCluster:
         self.jobs[spec.name] = job
         if self.broker is not None:
             self.broker.register_job(spec.name, list(cpus))
+            assert self.arbiter is not None
+            self.arbiter.register(spec.name, job.governor)
         return job
 
     def _push(self, t: float, kind: int, payload: Any) -> None:
@@ -252,6 +270,8 @@ class SimCluster:
             dlb_calls=(self.broker.job_calls(job.name)
                        if self.broker else 0),
             monitor_events=job.monitor_events,
+            sharing=(self.arbiter.stats[job.name].as_dict()
+                     if self.arbiter is not None else None),
         )
 
     def _submit_or_schedule(self, job: _SimJob) -> None:
@@ -291,6 +311,10 @@ class SimCluster:
             job.monitor_events += 3  # ready/execute/complete round trip
         if job.done:
             job.t_done = self.now
+            if self.broker is not None:
+                # a finished app claims nothing: drop any fairness
+                # reservation its last short acquire registered
+                self.broker.register_demand(job.name, 0)
         if newly:
             self._work_added(job)
         if job.manager.states().get(cpu) is not WorkerState.SPIN:
@@ -308,9 +332,11 @@ class SimCluster:
         # delays this worker's next poll.
         if (job.sharing and job.policy.eager_acquire
                 and job.scheduler.ready_count > 0):
-            assert self.broker is not None
+            assert self.broker is not None and self.arbiter is not None
             before = self.broker.job_calls(job.name)
-            self._acquire(job, 1, eager=True)
+            self.arbiter.execute(AppPlan(app=job.name, acquire=1,
+                                         eager=True),
+                                 lambda c: self._hand_cpu_to(job, c))
             n_calls = self.broker.job_calls(job.name) - before
             if n_calls:
                 self._push(self.now + n_calls * self.machine.dlb_call_overhead,
@@ -336,16 +362,17 @@ class SimCluster:
         ready = job.scheduler.ready_count
         if ready > 0:
             self._resume_workers(job, job.manager.notify_added(ready))
-        if job.sharing and not job.policy.eager_acquire:
-            assert isinstance(job.policy, SharingPolicy)
-            target = job.policy.acquire_target(job.manager.active,
-                                               job.scheduler.ready_count)
-            # The centralized heuristic peeks DLB's free-CPU counter
-            # (cheap shared-memory read, not a DLB call) before paying
-            # for an acquisition round-trip.
-            if target > 0 and (self.broker.pool_size() > 0
-                               or self.broker.lent_out(job.name) > 0):
-                self._acquire(job, target, eager=False)
+        if job.sharing:
+            # Centralized acquisition: the arbiter peeks DLB's free-CPU
+            # counter (cheap shared-memory read, not a DLB call) before
+            # paying for an acquisition round-trip, and splits the
+            # request per core type on heterogeneous machines.
+            assert self.arbiter is not None
+            plan = self.arbiter.plan_tick(job.name, job.manager.active,
+                                          job.scheduler.ready_count)
+            if plan is not None:
+                self.arbiter.execute(plan,
+                                     lambda c: self._hand_cpu_to(job, c))
         self._push(self.now + job.rate_s, _TICK, job.name)
 
     def _on_resume(self, job_name: str, cpu: int) -> None:
@@ -414,12 +441,14 @@ class SimCluster:
         ready = job.scheduler.ready_count
         if ready > 0:
             self._resume_workers(job, job.manager.notify_added(ready))
-        if job.sharing and job.policy.eager_acquire:
-            assert isinstance(job.policy, SharingPolicy)
-            target = job.policy.acquire_target(job.manager.active,
-                                               job.scheduler.ready_count)
-            if target > 0:
-                self._acquire(job, target, eager=True)
+        if job.sharing:
+            assert self.arbiter is not None
+            plan = self.arbiter.plan_work_added(job.name,
+                                                job.manager.active,
+                                                job.scheduler.ready_count)
+            if plan is not None:
+                self.arbiter.execute(plan,
+                                     lambda c: self._hand_cpu_to(job, c))
 
     def _resume_workers(self, job: _SimJob, woken: list[int]) -> None:
         for w in woken:
@@ -430,10 +459,10 @@ class SimCluster:
     # -- DLB mechanics ---------------------------------------------------------------
 
     def _lend(self, job: _SimJob, cpu: int) -> None:
-        assert self.broker is not None
+        assert self.arbiter is not None
         job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
         was_borrowed = cpu in job.borrowed
-        holder = self.broker.lend(job.name, cpu)
+        holder = self.arbiter.lend(job.name, cpu)
         if was_borrowed:
             job.borrowed.discard(cpu)
             # remove_worker closes the core's energy timeline (OFF)
@@ -443,12 +472,24 @@ class SimCluster:
         # Owned CPU stays registered as LENT (energy OFF) in our manager.
 
     def _return_borrowed(self, job: _SimJob, cpu: int) -> None:
-        assert self.broker is not None
-        owner_name = self.broker.return_cpu(job.name, cpu)
+        assert self.arbiter is not None
+        owner_name = self.arbiter.return_cpu(job.name, cpu)
         job.borrowed.discard(cpu)
         # remove_worker closes the core's energy timeline (OFF)
         job.manager.remove_worker(cpu)
         self._hand_cpu_to(self.jobs[owner_name], cpu)
+        if (job.scheduler.ready_count > 0 and job.manager.active == 0
+                and not job.waking):
+            # The forced return took the job's LAST worker while work is
+            # still queued (possible once ≥3 jobs trade CPUs: every
+            # owned CPU lent away, the final borrowed one reclaimed).
+            # Policies without a prediction tick (LeWI/hybrid) have no
+            # other wake-up path, so this deadlocked N-app clusters:
+            # claw capacity back through the broker — own lent CPUs
+            # first, a reclaim flag if they are all borrowed out.
+            self.arbiter.execute(
+                AppPlan(app=job.name, acquire=job.scheduler.ready_count),
+                lambda c: self._hand_cpu_to(job, c))
 
     def _hand_cpu_to(self, job: _SimJob, cpu: int) -> None:
         """CPU (re)arrives at ``job`` after the DLB hand-over latency."""
@@ -466,26 +507,6 @@ class SimCluster:
         job.waking.add(cpu)
         self._push(self.now + self.machine.borrow_latency, _RESUME,
                    (job.name, cpu))
-
-    def _acquire(self, job: _SimJob, target: int, eager: bool) -> None:
-        assert self.broker is not None
-        got: list[int] = []
-        if eager:
-            # LeWI-style: one broker call per CPU (per-thread acquisition).
-            for _ in range(target):
-                batch = self.broker.acquire(job.name, 1)
-                if not batch:
-                    break
-                got.extend(batch)
-        else:
-            got = self.broker.acquire(job.name, target)
-        for cpu in got:
-            self._hand_cpu_to(job, cpu)
-        if len(got) < target and self.broker.lent_out(job.name) > 0:
-            # Pool exhausted but our own CPUs are borrowed: flag a reclaim.
-            back = self.broker.reclaim(job.name)
-            for cpu in back:
-                self._hand_cpu_to(job, cpu)
 
 
 class SimExecutor:

@@ -53,6 +53,21 @@ class TraceReplayer:
         return replace(machine, name=f"{machine.name}-replay",
                        core_speed=1.0, monitor_event_overhead=0.0)
 
+    # -- multi-app traces --------------------------------------------------
+
+    def apps(self) -> list[str]:
+        """Application namespaces present in the trace (sorted; events
+        from per-app buses carry ``RuntimeEvent.app``).  Empty for a
+        single-app trace recorded from an unnamespaced bus."""
+        return sorted({ev.app for ev in self.events if ev.app is not None})
+
+    def for_app(self, app: str) -> "TraceReplayer":
+        """A replayer over this app's slice of a multi-app trace — the
+        per-app graphs/timelines rebuild independently, so a recorded
+        co-schedule can be replayed app-by-app or reassembled into a
+        fresh multi-app cluster."""
+        return TraceReplayer([ev for ev in self.events if ev.app == app])
+
     # -- graph reconstruction ----------------------------------------------
 
     def build(self) -> tuple[TaskGraph, FixedTimeline | None]:

@@ -39,6 +39,25 @@ def test_atomic_commit_no_tmp_left(tmp_path):
     assert manifest["step"] == 1
 
 
+def test_manifest_uses_monotonic_clock(tmp_path):
+    """Repo clock convention: perf_counter / virtual time, never wall
+    clock.  Wall-clock epochs are ~1.7e9 s; perf_counter starts near 0
+    at boot, and consecutive stamps must be monotonic."""
+    import time
+
+    lo = time.perf_counter()
+    save_checkpoint(tmp_path, 1, _tree())
+    save_checkpoint(tmp_path, 2, _tree())
+    hi = time.perf_counter()
+    m1 = json.loads((tmp_path / "step_000000001" /
+                     "manifest.json").read_text())
+    m2 = json.loads((tmp_path / "step_000000002" /
+                     "manifest.json").read_text())
+    assert lo <= m1["time"] <= m2["time"] <= hi
+    # durable provenance: a labelled wall-clock stamp survives restarts
+    assert m1["unix_time"] > 1e9
+
+
 def test_manager_gc_keeps_last(tmp_path):
     m = CheckpointManager(tmp_path, keep=2)
     for s in (1, 2, 3, 4):

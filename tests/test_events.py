@@ -47,6 +47,66 @@ class TestEventBus:
         bus.publish(ev(EventKind.PREDICTION))
         assert order == ["a", "b"]
 
+    def test_double_subscribe_delivers_once(self):
+        """Regression: subscribing the same handler twice silently
+        doubled every delivery (e.g. TaskMonitor costs); subscribe is
+        now idempotent per handler."""
+        bus = EventBus()
+        got = []
+        bus.subscribe(got.append)
+        bus.subscribe(got.append)
+        assert bus.n_subscribers == 1
+        bus.publish(ev(EventKind.PREDICTION))
+        assert len(got) == 1
+
+    def test_resubscribe_updates_kind_filter(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(got.append, kinds=[EventKind.PREDICTION])
+        bus.subscribe(got.append, kinds=[EventKind.TASK_READY])
+        bus.publish(ev(EventKind.PREDICTION))
+        bus.publish(ev(EventKind.TASK_READY, task_id=1, type_name="t",
+                       cost=1.0))
+        assert [e.kind for e in got] == [EventKind.TASK_READY]
+
+    def test_subscribe_unsubscribe_symmetric(self):
+        """One subscribe ⟺ one unsubscribe, including for bound methods
+        (fresh objects on each attribute access, equal by value)."""
+        bus = EventBus()
+
+        class Sink:
+            def __init__(self):
+                self.got = []
+
+            def on_event(self, e):
+                self.got.append(e)
+
+        sink = Sink()
+        bus.subscribe(sink.on_event)
+        bus.subscribe(sink.on_event)          # idempotent
+        assert bus.n_subscribers == 1
+        bus.unsubscribe(sink.on_event)        # removes exactly the one
+        assert bus.n_subscribers == 0
+        bus.publish(ev(EventKind.PREDICTION))
+        assert sink.got == []
+
+    def test_app_namespace_stamped_on_publish(self):
+        bus = EventBus(app="gauss")
+        got = []
+        bus.subscribe(got.append)
+        bus.publish(ev(EventKind.PREDICTION))
+        assert got[0].app == "gauss"
+        # an event that already carries a namespace keeps it
+        bus.publish(ev(EventKind.PREDICTION, app="other"))
+        assert got[1].app == "other"
+        d = got[0].to_dict()
+        assert d["app"] == "gauss"
+        assert RuntimeEvent.from_dict(d).app == "gauss"
+
+    def test_unnamespaced_event_dict_has_no_app_key(self):
+        e = ev(EventKind.PREDICTION)
+        assert "app" not in e.to_dict()       # old traces stay identical
+
     def test_event_dict_round_trip(self):
         e = ev(EventKind.TASK_COMPLETED, time=1.5, task_id=7,
                type_name="x", cost=2.0, worker_id=3, elapsed=0.25,

@@ -12,6 +12,11 @@ from repro.models import (decode_step, forward, init_params,
 
 KEY = jax.random.PRNGKey(0)
 
+# Whole-module: per-arch forward/decode/train-step sweeps dominate the
+# suite's wall clock (~2 min of the ~3.5); CI's fast lane skips them
+# (-m "not slow"), the tests-full job still runs everything.
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B=2, S=32):
     F = cfg.frontend_len

@@ -2,6 +2,7 @@
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import forward, init_params
@@ -20,6 +21,7 @@ def _greedy_reference(prompt, n_new):
     return toks[len(prompt):]
 
 
+@pytest.mark.slow
 def test_single_request_matches_reference():
     engine = ServingEngine(CFG, PARAMS, max_batch=2, max_len=64)
     req = engine.submit(Request(prompt=[5, 9, 2, 7], max_new_tokens=6))
@@ -28,6 +30,7 @@ def test_single_request_matches_reference():
     assert req.output == _greedy_reference([5, 9, 2, 7], 6)
 
 
+@pytest.mark.slow
 def test_continuous_batching_mixed_lengths():
     engine = ServingEngine(CFG, PARAMS, max_batch=2, max_len=64)
     prompts = [[1, 2, 3], [4, 5, 6, 7, 8], [9, 10], [11, 12, 13, 14]]

@@ -16,6 +16,14 @@ def _broker2() -> ResourceBroker:
     return b
 
 
+def _broker_n(n_jobs: int, cpus_per_job: int = 2) -> ResourceBroker:
+    b = ResourceBroker()
+    for i in range(n_jobs):
+        base = i * cpus_per_job
+        b.register_job(f"j{i}", list(range(base, base + cpus_per_job)))
+    return b
+
+
 class TestBroker:
     def test_lend_acquire_roundtrip(self):
         b = _broker2()
@@ -48,6 +56,20 @@ class TestBroker:
         assert b.job_calls("a") == 1
         assert b.job_calls("b") == 2
         assert b.total_calls == 3
+
+    def test_noop_acquire_is_not_a_dlb_call(self):
+        """Regression: ``acquire(max_n <= 0)`` never reaches the DLB
+        library, so it must not inflate the Table-3 call-cost metric —
+        ``dlb-prediction`` computes ``acquire_target`` every tick and a
+        zero target used to be billed as a real call."""
+        b = _broker2()
+        assert b.acquire("b", 0) == []
+        assert b.acquire("b", -3) == []
+        assert b.job_calls("b") == 0
+        assert b.total_calls == 0
+        # a real (even unsuccessful) request still counts
+        assert b.acquire("b", 1) == []
+        assert b.job_calls("b") == 1 and b.total_calls == 1
 
     def test_return_cpu_keeps_pending_reclaim_wanted(self):
         """Regression: returning ONE of several flagged CPUs must not
@@ -162,6 +184,148 @@ class TestBrokerInvariants:
         for op, cpu in seq:
             self._apply(b, op, cpu)
             _check_invariants(b)
+
+
+class TestBrokerInvariantsNJobs:
+    """The same partition invariants under random N ∈ [2, 5] jobs —
+    multiprogramming is exactly where holder/lent/borrowed bookkeeping
+    has historically gone wrong (one borrower's return touching another
+    owner's flags, the fairness reservation skewing the pool, …)."""
+
+    VERBS = ["lend", "acq", "reclaim", "ret"]
+
+    @staticmethod
+    def _apply(b: ResourceBroker, verb: str, job: str, cpu: int) -> None:
+        if verb == "lend":
+            # lending is only legal for a CPU the job actually runs on
+            if b.holder(cpu) == job:
+                b.lend(job, cpu)
+        elif verb == "acq":
+            b.acquire(job, 1 + cpu % 3)
+        elif verb == "reclaim":
+            b.reclaim(job)
+        else:   # cooperative return at a task boundary
+            if cpu in b._jobs[job].borrowed and b.cpu_must_return(cpu):
+                b.return_cpu(job, cpu)
+
+    @given(st.integers(2, 5),
+           st.lists(st.tuples(st.sampled_from(VERBS), st.integers(0, 4),
+                              st.integers(0, 9)),
+                    max_size=100))
+    @settings(max_examples=150, deadline=None)
+    def test_random_n_job_interleavings(self, n_jobs, ops):
+        b = _broker_n(n_jobs)
+        n_cpus = n_jobs * 2
+        for verb, job_i, cpu in ops:
+            self._apply(b, verb, f"j{job_i % n_jobs}", cpu % n_cpus)
+            _check_invariants(b)
+
+    def test_deterministic_interleaving_5_jobs(self):
+        """Dense 5-job sequence; runs even without hypothesis."""
+        b = _broker_n(5)
+        seq = [("lend", "j0", 0), ("lend", "j0", 1), ("lend", "j3", 6),
+               ("acq", "j1", 2), ("acq", "j2", 1), ("reclaim", "j0", 0),
+               ("ret", "j1", 0), ("ret", "j1", 1), ("ret", "j2", 6),
+               ("lend", "j4", 8), ("acq", "j2", 0), ("acq", "j3", 2),
+               ("reclaim", "j4", 0), ("ret", "j2", 8), ("lend", "j1", 2),
+               ("acq", "j0", 1), ("reclaim", "j3", 0), ("ret", "j0", 6),
+               ("acq", "j4", 2), ("lend", "j2", 4)]
+        for verb, job, cpu in seq:
+            self._apply(b, verb, job, cpu)
+            _check_invariants(b)
+
+
+class TestForeignClaimantFairness:
+    """Regression: with ≥3 jobs, own-first-then-FIFO draining let the
+    borrower whose tick fired first take the whole pool every round,
+    starving a third job indefinitely.  The broker now reserves foreign
+    CPUs for less-recently-served claimants with registered unmet
+    demand (round-robin via least-recently-served)."""
+
+    @staticmethod
+    def _broker3() -> ResourceBroker:
+        b = ResourceBroker()
+        b.register_job("a", [0, 1])
+        b.register_job("b", [2, 3])
+        b.register_job("c", [4, 5])
+        return b
+
+    def test_three_job_starvation_round_robin(self):
+        b = self._broker3()
+        b.lend("a", 0)
+        b.lend("a", 1)
+        # b's tick always fires first: without fairness it would win the
+        # whole pool on every round.
+        assert b.acquire("b", 2) == [0, 1]
+        # c asks, comes up short -> its unmet demand is registered
+        assert b.acquire("c", 2) == []
+        # the CPUs come back to the pool...
+        b.lend("b", 0)
+        b.lend("b", 1)
+        # ...and b (served more recently than the waiting c) must now
+        # leave them for c, even though it asks first again.
+        assert b.acquire("b", 2) == []
+        assert b.acquire("c", 2) == [0, 1]
+        # roles flip: b is now the least recently served waiter
+        b.lend("c", 0)
+        b.lend("c", 1)
+        assert b.acquire("c", 2) == []
+        assert b.acquire("b", 2) == [0, 1]
+
+    def test_own_cpus_never_reserved_away(self):
+        """The reservation applies to *foreign* claims only: an owner
+        reclaiming its own lent silicon always wins."""
+        b = self._broker3()
+        b.lend("a", 0)
+        assert b.acquire("b", 2) == [0]      # b borrows, is "served"
+        assert b.acquire("c", 1) == []       # c registers unmet demand
+        b.lend("b", 0)                       # back to the pool
+        # a's own CPU: c's reservation must not block the owner
+        assert b.acquire("a", 1) == [0]
+
+    def test_lending_clears_stale_demand(self):
+        b = self._broker3()
+        b.lend("a", 0)
+        assert b.acquire("b", 1) == [0]
+        assert b.acquire("c", 1) == []       # c waiting
+        b.lend("b", 0)
+        b.lend("c", 4)                       # c lends ⇒ surplus ⇒ no claim
+        assert b.acquire("b", 1) == [0]      # reservation gone
+
+
+class TestTypedBroker:
+    """Per-core-type accounting: a P-core lent is not an E-core grant."""
+
+    @staticmethod
+    def _typed() -> ResourceBroker:
+        b = ResourceBroker(core_type_of=lambda c: "P" if c < 4 else "E")
+        b.register_job("a", [0, 1, 4, 5])    # 2 P + 2 E
+        b.register_job("b", [2, 3, 6, 7])    # 2 P + 2 E
+        return b
+
+    def test_pool_by_type(self):
+        b = self._typed()
+        b.lend("a", 0)
+        b.lend("a", 4)
+        b.lend("a", 5)
+        assert b.pool_by_type() == {"P": 1, "E": 2}
+        assert b.pool_size("P") == 1 and b.pool_size("E") == 2
+        assert b.pool_size() == 3
+
+    def test_typed_acquire_filters(self):
+        b = self._typed()
+        b.lend("a", 0)                       # P into the pool
+        b.lend("a", 4)                       # E into the pool
+        got = b.acquire("b", 2, core_type="E")
+        assert got == [4]                    # never the P core
+        assert b.pool_by_type() == {"P": 1}
+        assert b.acquire("b", 1, core_type="P") == [0]
+
+    def test_untyped_broker_reports_blank_type(self):
+        b = _broker2()
+        b.lend("a", 0)
+        assert b.pool_by_type() == {"": 1}
+        assert not b.typed
 
 
 class TestSharingPolicies:

@@ -1,6 +1,7 @@
 """Trainer end-to-end: loss descent, checkpoint/restart continuity."""
 
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.train.trainer import Trainer, TrainerConfig
@@ -24,6 +25,7 @@ def test_loss_decreases():
     assert last < first
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_continuity(tmp_path):
     """An interrupted-and-restored run must produce EXACTLY the losses of
     an uninterrupted run: params/opt round-trip bitwise (bf16 stored as
