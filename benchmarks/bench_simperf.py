@@ -1,0 +1,157 @@
+"""Simulator event-loop throughput (the PR-5 hot-path overhaul).
+
+Measures events/second of ``SimCluster.run`` across the four scenario
+families the repo sweeps at cluster scale — {closed 100k-task Cholesky,
+Poisson open workload, N=4 multi-app co-schedule, HYBRID-PE
+heterogeneous} × {busy, prediction, dlb-prediction, hetero-prediction}
+— in both scheduler modes:
+
+* ``fast``       — the default lock-free sequential scheduler path;
+* ``threadsafe`` — the locked reference scheduler
+  (``SimCluster(..., threadsafe=True)``), pinned observationally
+  identical by ``tests/test_simperf.py``.
+
+Every scenario also emits a ``baseline`` row: events/sec of the same
+scenario measured with this same harness (``time.process_time``,
+best-of-N) at the pre-overhaul commit (bc6f732, PR 4).  Those numbers
+are frozen constants — the old code no longer exists in the tree — and
+they are what the acceptance speedups are computed against.
+
+Cross-machine comparability: rows carry ``calibration`` — the wall
+seconds this interpreter needs for a fixed pure-Python loop — so a
+re-run on different silicon compares *normalized* throughput
+(events/sec × calibration), not absolute times.  The throughput-floor
+pin test in ``tests/test_simperf.py`` uses exactly that ratio.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.sharing import ResourceBroker
+from repro.runtime import HYBRID_PE, MN4, SimCluster, SimJobSpec
+from repro.workloads.arrivals import PoissonArrivals
+from repro.workloads.cholesky import build_cholesky
+
+from .common import emit
+
+#: pre-overhaul events/sec (commit bc6f732) — same scenarios, same
+#: harness (process_time, best-of-3), measured on the machine that
+#: produced the committed BENCH_simperf.json (calibration ≈ 0.09 s)
+BASELINE_EVENTS_PER_SEC = {
+    "closed-cholesky-100k/busy": 70_095.9,
+    "closed-cholesky-100k/prediction": 31_103.7,
+    "open-poisson/prediction": 42_351.4,
+    "multiapp-n4/dlb-prediction": 42_869.5,
+    "hetero-hybridpe/hetero-prediction": 20_216.8,
+}
+
+
+def calibrate() -> float:
+    """Seconds of CPU for a fixed pure-Python workload — the machine
+    speed yardstick that makes committed events/sec portable."""
+    t0 = time.process_time()
+    acc = 0
+    for i in range(2_000_000):
+        acc += i * i
+    return time.process_time() - t0
+
+
+def _scenarios(smoke: bool):
+    """(name, machine, spec-builder) per scenario; builders return fresh
+    specs each call (schedulers mutate task state)."""
+    p_closed = 20 if smoke else 84          # 1 540 vs 102 340 tasks
+    p_open = 14 if smoke else 42
+    p_app = 10 if smoke else 28
+
+    def closed(policy):
+        def mk():
+            return [SimJobSpec(
+                name="job0", policy=policy,
+                graph=build_cholesky("fine", p=p_closed, seed=0))]
+        return mk
+
+    def open_poisson():
+        return [SimJobSpec(
+            name="job0", policy="prediction",
+            graph=build_cholesky("fine", p=p_open, seed=0),
+            arrivals=PoissonArrivals(rate=200_000.0, seed=1))]
+
+    def multi():
+        return [SimJobSpec(
+            name=f"app{i}", policy="dlb-prediction",
+            graph=build_cholesky("fine", p=p_app, seed=i),
+            cpus=list(range(i * 12, (i + 1) * 12))) for i in range(4)]
+
+    def hetero():
+        return [SimJobSpec(
+            name="job0", policy="hetero-prediction",
+            graph=build_cholesky("fine", p=p_open, seed=0))]
+
+    return [
+        ("closed-cholesky-100k/busy", MN4, closed("busy")),
+        ("closed-cholesky-100k/prediction", MN4, closed("prediction")),
+        ("open-poisson/prediction", MN4, open_poisson),
+        ("multiapp-n4/dlb-prediction", MN4, multi),
+        ("hetero-hybridpe/hetero-prediction", HYBRID_PE, hetero),
+    ]
+
+
+def _measure(machine, mk_specs, threadsafe: bool, reps: int,
+             ) -> tuple[int, float]:
+    """Best-of-``reps`` (events, cpu_seconds) for one scenario/mode."""
+    best: tuple[float, int] | None = None
+    for _ in range(reps):
+        specs = mk_specs()
+        broker = ResourceBroker() if len(specs) > 1 else None
+        cluster = SimCluster(machine, broker=broker,
+                             threadsafe=threadsafe)
+        for spec in specs:
+            cluster.add_job(spec)
+        t0 = time.process_time()
+        cluster.run()
+        cpu = time.process_time() - t0
+        if best is None or cpu < best[0]:
+            best = (cpu, cluster.events_processed)
+    assert best is not None
+    return best[1], best[0]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    reps = 1 if smoke else 3
+    calibration = calibrate()
+    rows = []
+    for name, machine, mk_specs in _scenarios(smoke):
+        if not smoke:
+            # Baseline rows/ratios only make sense at full scale: the
+            # recorded constants were measured on the full scenarios,
+            # and smoke shrinks the graphs to seconds-scale stand-ins.
+            rows.append({
+                "bench": "simperf", "scenario": name, "mode": "baseline",
+                "events_per_sec": BASELINE_EVENTS_PER_SEC[name],
+                "note": "pre-overhaul (commit bc6f732), recorded "
+                        "constant",
+            })
+            emit(rows[-1])
+        per_mode: dict[str, float] = {}
+        for mode, threadsafe in (("threadsafe", True), ("fast", False)):
+            events, cpu = _measure(machine, mk_specs, threadsafe, reps)
+            eps = events / cpu if cpu > 0 else float("inf")
+            per_mode[mode] = eps
+            rows.append({
+                "bench": "simperf", "scenario": name, "mode": mode,
+                "events": events, "cpu_s": round(cpu, 3),
+                "events_per_sec": round(eps, 1),
+                "calibration": round(calibration, 4),
+            })
+            if not smoke:
+                rows[-1]["speedup_vs_baseline"] = round(
+                    eps / BASELINE_EVENTS_PER_SEC[name], 2)
+            emit(rows[-1])
+        rows[-1]["speedup_vs_threadsafe"] = round(
+            per_mode["fast"] / per_mode["threadsafe"], 2)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -23,7 +23,8 @@ import time
 from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
-            "roofline", "open_workloads", "heterogeneous", "multiapp"]
+            "roofline", "open_workloads", "heterogeneous", "multiapp",
+            "simperf"]
 
 CAPTIONS = {
     "accuracy": "(paper Table 2)",
@@ -33,6 +34,7 @@ CAPTIONS = {
     "open_workloads": "(beyond-paper: arrival-driven load)",
     "heterogeneous": "(beyond-paper: asymmetric cores + DVFS)",
     "multiapp": "(beyond-paper: N-app co-scheduling arbiter)",
+    "simperf": "(simulator event-loop throughput)",
 }
 
 

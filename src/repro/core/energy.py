@@ -42,6 +42,13 @@ class CoreState(enum.Enum):
     OFF = "off"         # lent to another runtime (DLB) or fenced off
 
 
+# Dense per-member index: hot-path accumulators are plain lists indexed
+# by `state.idx` (an attribute load) instead of dicts keyed by the enum
+# member (enum.__hash__ is a Python-level call, paid per segment close).
+for _i, _s in enumerate(CoreState):
+    _s.idx = _i
+
+
 @dataclass(frozen=True)
 class PowerModel:
     active: float = 1.0
@@ -51,20 +58,27 @@ class PowerModel:
     #: energy spike charged per idle→active resume (wakeup cost)
     resume_energy: float = 0.0
 
+    def __post_init__(self) -> None:
+        # power() runs once per state-segment close on the simulator hot
+        # path; cache the idx→power list instead of rebuilding a dict
+        # per call (frozen dataclass, hence object.__setattr__).
+        by_state = [0.0] * len(CoreState)
+        by_state[CoreState.ACTIVE.idx] = self.active
+        by_state[CoreState.SPIN.idx] = self.spin
+        by_state[CoreState.IDLE.idx] = self.idle
+        by_state[CoreState.OFF.idx] = self.off
+        object.__setattr__(self, "_by_state", by_state)
+
     def power(self, state: CoreState, freq: float = 1.0) -> float:
-        base = {
-            CoreState.ACTIVE: self.active,
-            CoreState.SPIN: self.spin,
-            CoreState.IDLE: self.idle,
-            CoreState.OFF: self.off,
-        }[state]
-        if freq != 1.0 and state in (CoreState.ACTIVE, CoreState.SPIN):
+        base = self._by_state[state.idx]
+        if freq != 1.0 and (state is CoreState.ACTIVE
+                            or state is CoreState.SPIN):
             # cubic dynamic component over the static (idle) floor
             return self.idle + (base - self.idle) * freq ** 3
         return base
 
 
-@dataclass
+@dataclass(slots=True)
 class _CoreTimeline:
     state: CoreState
     since: float
@@ -72,14 +86,15 @@ class _CoreTimeline:
     core_type: str = ""
     freq: float = 1.0
     joules: float = 0.0
-    accum: dict[CoreState, float] = field(
-        default_factory=lambda: {s: 0.0 for s in CoreState})
+    # state-seconds accumulator indexed by CoreState.idx
+    accum: list[float] = field(
+        default_factory=lambda: [0.0] * len(CoreState))
     resumes: int = 0
 
     def close_segment(self, now: float) -> None:
-        dt = max(0.0, now - self.since)
-        if dt:
-            self.accum[self.state] += dt
+        dt = now - self.since
+        if dt > 0.0:
+            self.accum[self.state.idx] += dt
             self.joules += dt * self.power.power(self.state, self.freq)
         self.since = now
 
@@ -124,12 +139,23 @@ class EnergyMeter:
             core_type=core_type)
 
     def set_state(self, core_id: int, state: CoreState, now: float) -> None:
+        """Transition a core; identical-state calls coalesce (the open
+        segment keeps integrating as one (core, state) run — state
+        churn that lands back on the same state costs nothing).
+
+        ``close_segment`` is inlined: this runs twice per simulated
+        task."""
         tl = self._cores[core_id]
-        if tl.state is state:
+        prev = tl.state
+        if prev is state:
             return
-        tl.close_segment(now)
-        if tl.state is CoreState.IDLE and state in (CoreState.ACTIVE,
-                                                    CoreState.SPIN):
+        dt = now - tl.since
+        if dt > 0.0:
+            tl.accum[prev.idx] += dt
+            tl.joules += dt * tl.power.power(prev, tl.freq)
+        tl.since = now
+        if prev is CoreState.IDLE and (state is CoreState.ACTIVE
+                                       or state is CoreState.SPIN):
             tl.resumes += 1
         tl.state = state
 
@@ -154,8 +180,8 @@ class EnergyMeter:
     def state_seconds(self) -> dict[CoreState, float]:
         out = {s: 0.0 for s in CoreState}
         for tl in self._cores.values():
-            for s, v in tl.accum.items():
-                out[s] += v
+            for s in CoreState:
+                out[s] += tl.accum[s.idx]
         return out
 
     def state_seconds_by_type(self) -> dict[str, dict[CoreState, float]]:
@@ -167,8 +193,8 @@ class EnergyMeter:
                 continue
             acc = out.setdefault(tl.core_type,
                                  {s: 0.0 for s in CoreState})
-            for s, v in tl.accum.items():
-                acc[s] += v
+            for s in CoreState:
+                acc[s] += tl.accum[s.idx]
         return out
 
     def energy_by_type(self) -> dict[str, float]:

@@ -29,7 +29,12 @@ import threading
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Iterable, Mapping
 
-__all__ = ["EventKind", "RuntimeEvent", "EventBus"]
+__all__ = ["EventKind", "RuntimeEvent", "EventBus", "QUIET_INTEREST"]
+
+#: the :attr:`EventBus.interest` value of a bus nobody subscribed to —
+#: producers compare against it to skip publish calls entirely on quiet
+#: hot paths (one shared definition; an empty frozenset compares equal)
+QUIET_INTEREST: frozenset = frozenset()
 
 
 class EventKind(enum.Enum):
@@ -49,7 +54,7 @@ class EventKind(enum.Enum):
     PREDICTION = "prediction"
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class RuntimeEvent:
     """One structured runtime event; immutable and JSON-serializable."""
 
@@ -107,6 +112,22 @@ class EventBus:
         # without holding the lock.
         self._subs: tuple[tuple[Callable[[RuntimeEvent], None],
                                 frozenset[EventKind] | None], ...] = ()
+        #: public read-only view of subscriber interest — the union of
+        #: every subscriber's kind filter.  None ⇒ some subscriber wants
+        #: all kinds; empty (== :data:`QUIET_INTEREST`) ⇒ nobody wants
+        #: anything.  Recomputed on (un)subscribe so per-event pre-checks
+        #: are one attribute load + set probe; producers read it directly
+        #: on hot paths (scheduler, manager, governor).
+        self.interest: frozenset[EventKind] | None = QUIET_INTEREST
+
+    def _recompute_interest_locked(self) -> None:
+        kinds: set[EventKind] = set()
+        for _, ks in self._subs:
+            if ks is None:
+                self.interest = None
+                return
+            kinds |= ks
+        self.interest = frozenset(kinds)
 
     def subscribe(self, handler: Callable[[RuntimeEvent], None],
                   kinds: Iterable[EventKind] | None = None,
@@ -127,8 +148,10 @@ class EventBus:
                 if h == handler:
                     self._subs = (self._subs[:i] + ((handler, ks),)
                                   + self._subs[i + 1:])
+                    self._recompute_interest_locked()
                     return handler
             self._subs = self._subs + ((handler, ks),)
+            self._recompute_interest_locked()
         return handler
 
     def unsubscribe(self, handler: Callable[[RuntimeEvent], None]) -> None:
@@ -141,6 +164,7 @@ class EventBus:
             for i, (h, _) in enumerate(self._subs):
                 if h == handler:
                     self._subs = self._subs[:i] + self._subs[i + 1:]
+                    self._recompute_interest_locked()
                     return
 
     @property
@@ -151,10 +175,25 @@ class EventBus:
         """True iff some subscriber would receive ``kind`` — the cheap
         pre-check that lets producers skip building event payloads on
         hot paths (a kind-filtered subscriber, e.g. the TaskMonitor,
-        does not make the bus interested in other kinds)."""
-        return any(ks is None or kind in ks for _, ks in self._subs)
+        does not make the bus interested in other kinds).  One set
+        lookup against the cached interest union — O(1) regardless of
+        subscriber count."""
+        interest = self.interest
+        if interest is None:
+            return True
+        # `not interest` before the containment check: an empty frozenset
+        # (subscriber-free bus — THE hot case) answers without hashing
+        # the enum member (enum.__hash__ is a Python-level call).
+        return bool(interest) and kind in interest
 
     def publish(self, event: RuntimeEvent) -> None:
+        # Same pre-check publish-side: on a subscriber-free bus (or one
+        # whose subscribers filter this kind out) this returns before the
+        # app-stamping replace(), so publishing is a no-alloc no-op.
+        interest = self.interest
+        if interest is not None and (not interest
+                                     or event.kind not in interest):
+            return
         if self.app is not None and event.app is None:
             event = replace(event, app=self.app)
         for handler, kinds in self._subs:

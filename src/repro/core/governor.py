@@ -38,6 +38,7 @@ from dataclasses import asdict, dataclass, field, replace
 from typing import Any, Callable, Mapping
 
 from .energy import CoreState, EnergyMeter, PowerModel
+from .events import QUIET_INTEREST as _QUIET
 from .events import EventBus, EventKind, RuntimeEvent
 from .manager import WorkerManager
 from .monitoring import DEFAULT_MIN_SAMPLES, AccuracyReport, TaskMonitor
@@ -385,6 +386,10 @@ class ResourceGovernor:
                                           n_cpus=spec.resources, config=cfg,
                                           topology=self.topology)
         self.policy: Policy = entry.factory(spec, self.predictor)
+        # DVFS bookkeeping is only live with a predictor + energy meter
+        # + explicit topology; cache the verdict off the tick hot path.
+        self._dvfs = (self.predictor is not None and clock is not None
+                      and self.topology is not None)
         self.manager: WorkerManager | None = None
         self.energy: EnergyMeter | None = None
         self._type_of_worker: dict[int, str] = {}
@@ -503,9 +508,12 @@ class ResourceGovernor:
             # simulator, which only schedules ticks when the policy
             # uses predictions).
             return self.spec.resources
-        self.apply_frequencies()
+        if self._dvfs:
+            self.apply_frequencies()
         delta = self.predictor.delta
-        self._publish_prediction(delta)
+        bus = self.bus
+        if bus is not None and bus.interest != _QUIET:
+            self._publish_prediction(delta)
         return delta
 
     def apply_frequencies(self) -> dict[str, float]:
@@ -614,7 +622,7 @@ class ResourceGovernor:
                 ct: {s.value: v for s, v in acc.items()}
                 for ct, acc in
                 energy_meter.state_seconds_by_type().items()},
-            freq_by_type=(self.predictor.freq_by_type
+            freq_by_type=(dict(self.predictor.freq_by_type)
                           if self.predictor is not None
                           and not self._topology_synthesized else {}),
             sharing=dict(sharing) if sharing else {},

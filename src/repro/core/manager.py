@@ -50,6 +50,12 @@ _ENERGY_STATE = {
     WorkerState.LENT: CoreState.OFF,
 }
 
+# Per-member attribute mirror of _ENERGY_STATE: `state._energy` is a
+# plain attribute load, where a dict lookup pays enum.__hash__ (a
+# Python-level call) once per worker transition on the hot path.
+for _ws, _cs in _ENERGY_STATE.items():
+    _ws._energy = _cs
+
 
 class WorkerManager:
     """Tracks δ (active workers) and applies policy decisions atomically."""
@@ -75,6 +81,17 @@ class WorkerManager:
         self._states: dict[int, WorkerState] = {
             w: WorkerState.SPIN for w in ids}
         self._spin_counts: dict[int, int] = {w: 0 for w in ids}
+        # δ maintained incrementally — poll decisions used to recount the
+        # whole state dict on every empty poll (O(workers) per event on
+        # the simulator hot path).
+        self._n_active = len(ids)
+        self._n_idle = 0
+        self._n_active_by_type: dict[str, int] = {}
+        if core_type_of is not None:
+            for w in ids:
+                ct = core_type_of(w)
+                self._n_active_by_type[ct] = \
+                    self._n_active_by_type.get(ct, 0) + 1
         # Transition counters (observability / paper overhead discussion).
         self.idles = 0
         self.resumes = 0
@@ -89,27 +106,22 @@ class WorkerManager:
     @property
     def active(self) -> int:
         """δ — workers currently holding a CPU (executing or spinning)."""
-        with self._lock:
-            return self._active_locked()
+        return self._n_active
 
     def _active_locked(self) -> int:
-        return sum(1 for s in self._states.values()
-                   if s in (WorkerState.ACTIVE, WorkerState.SPIN))
+        return self._n_active
 
     def active_by_type(self) -> dict[str, int]:
-        """δ split per core type ({} without a ``core_type_of``)."""
+        """δ split per core type ({} without a ``core_type_of``;
+        zero-count types are pruned)."""
         with self._lock:
-            return self._active_by_type_locked()
+            return {ct: n for ct, n in self._n_active_by_type.items()
+                    if n > 0}
 
     def _active_by_type_locked(self) -> dict[str, int]:
-        out: dict[str, int] = {}
-        if self.core_type_of is None:
-            return out
-        for w, s in self._states.items():
-            if s in (WorkerState.ACTIVE, WorkerState.SPIN):
-                ct = self.core_type_of(w)
-                out[ct] = out.get(ct, 0) + 1
-        return out
+        # The live counter dict (may carry zero entries) — read-only for
+        # callers; the hetero policy's bound reader uses .get() lookups.
+        return self._n_active_by_type
 
     @property
     def idle_workers(self) -> list[int]:
@@ -121,9 +133,40 @@ class WorkerManager:
         with self._lock:
             return self._states[worker_id]
 
+    def state_of(self, worker_id: int) -> WorkerState | None:
+        """Current state, or None for unknown workers — a single dict
+        probe, unlike :meth:`states` which copies the whole map."""
+        return self._states.get(worker_id)
+
     def states(self) -> dict[int, WorkerState]:
         with self._lock:
             return dict(self._states)
+
+    def spinning(self, exclude: "set[int] | frozenset[int]" = frozenset(),
+                 ) -> list[int]:
+        """Spinning workers (minus ``exclude``) in wake/dispatch order —
+        one pass under the lock instead of a states() copy + filter."""
+        with self._lock:
+            out = [w for w, s in self._states.items()
+                   if s is WorkerState.SPIN and w not in exclude]
+        return self.wake_first(out)
+
+    def iter_spinning(self, exclude: "set[int] | frozenset[int]"
+                      = frozenset()):
+        """Lazy :meth:`spinning` for single-threaded dispatch loops that
+        usually consume one or two workers out of dozens.  The caller
+        may flip the state of *yielded* workers between yields (value
+        mutations keep dict iteration valid) but must not add or remove
+        workers.  Falls back to the materialized list on park-ordered
+        (heterogeneous) managers, where wake order needs the full sort.
+        """
+        if self._park_rank:
+            yield from self.spinning(exclude)
+            return
+        spin = WorkerState.SPIN
+        for w, s in self._states.items():
+            if s is spin and w not in exclude:
+                yield w
 
     # -- ordering ------------------------------------------------------------
 
@@ -136,24 +179,75 @@ class WorkerManager:
     def park_first(self, workers: list[int]) -> list[int]:
         """``workers`` sorted for trimming: lowest park rank first
         (stable — identity without a topology)."""
+        if not self._park_rank:
+            return workers
         return sorted(workers, key=self._rank)
 
     def wake_first(self, workers: list[int]) -> list[int]:
         """``workers`` sorted for waking/dispatch: highest park rank
         first (stable — identity without a topology)."""
+        if not self._park_rank:
+            return workers
         return sorted(workers, key=lambda w: -self._rank(w))
 
     # -- transitions ---------------------------------------------------------
 
+    _HOLDING = (WorkerState.ACTIVE, WorkerState.SPIN)
+
+    def _count(self, worker_id: int, prev: WorkerState | None,
+               state: WorkerState | None) -> None:
+        """Incrementally maintain δ, the idle count and the per-type
+        split across one worker's ``prev → state`` transition (None ⇒
+        absent)."""
+        if prev is WorkerState.IDLE:
+            self._n_idle -= 1
+        if state is WorkerState.IDLE:
+            self._n_idle += 1
+        held = prev in self._HOLDING
+        holds = state in self._HOLDING
+        if held is holds:
+            return
+        d = 1 if holds else -1
+        self._n_active += d
+        if self.core_type_of is not None:
+            ct = self.core_type_of(worker_id)
+            self._n_active_by_type[ct] = \
+                self._n_active_by_type.get(ct, 0) + d
+
     def _set(self, worker_id: int, state: WorkerState) -> None:
+        # Hot path (two transitions per simulated task): the counter
+        # maintenance is _count() inlined, and the bus pre-check reads
+        # the cached interest union directly instead of paying a method
+        # call per transition.
         prev = self._states.get(worker_id)
+        if prev is state:
+            return
         self._states[worker_id] = state
+        if prev is WorkerState.IDLE:
+            self._n_idle -= 1
+        elif state is WorkerState.IDLE:
+            self._n_idle += 1
+        held = prev in self._HOLDING
+        if held is not (state in self._HOLDING):
+            d = -1 if held else 1
+            self._n_active += d
+            if self.core_type_of is not None:
+                ct = self.core_type_of(worker_id)
+                self._n_active_by_type[ct] = \
+                    self._n_active_by_type.get(ct, 0) + d
         if self.energy is not None:
-            self.energy.set_state(worker_id, _ENERGY_STATE[state],
-                                  self.clock())
-        if (self.bus is not None and prev is not state
-                and self.bus.interested(EventKind.WORKER_STATE)):
-            self.bus.publish(RuntimeEvent(
+            self.energy.set_state(worker_id, state._energy, self.clock())
+        bus = self.bus
+        if bus is not None:
+            interest = bus.interest
+            if interest is None or interest:
+                self._publish_state(bus, worker_id, prev, state)
+
+    def _publish_state(self, bus: EventBus, worker_id: int,
+                       prev: WorkerState | None,
+                       state: WorkerState) -> None:
+        if bus.interested(EventKind.WORKER_STATE):
+            bus.publish(RuntimeEvent(
                 kind=EventKind.WORKER_STATE, time=self.clock(),
                 worker_id=worker_id,
                 data={"state": state.value,
@@ -193,13 +287,17 @@ class WorkerManager:
         """
         with self._lock:
             if spin_count_override is not None:
-                self._spin_counts[worker_id] = spin_count_override
+                count = spin_count_override
+                self._spin_counts[worker_id] = count
             else:
-                self._spin_counts[worker_id] += 1
+                count = self._spin_counts[worker_id] + 1
+                self._spin_counts[worker_id] = count
             decision = self.policy.on_poll_empty(
-                worker_id, self._active_locked(),
-                self._spin_counts[worker_id])
-            self._apply_poll_decision_locked(worker_id, decision)
+                worker_id, self._n_active, count)
+            if decision is not PollDecision.SPIN:
+                # SPIN applies no transition; skip the apply call on the
+                # (dominant) keep-spinning outcome
+                self._apply_poll_decision_locked(worker_id, decision)
             return decision
 
     def notify_added(self, ready_tasks: int) -> list[int]:
@@ -211,11 +309,21 @@ class WorkerManager:
         reverse (fastest-to-park woken last).
         """
         with self._lock:
+            n_idle = self._n_idle
+            if n_idle == 0:
+                return []
+            # Ask the policy first (it only needs the counts — all
+            # implementations are pure decision logic) and build the
+            # ordered idle list only when somebody actually wakes:
+            # prediction-rate ticks with δ ≥ Δ used to pay a full
+            # state-map scan just to wake nobody.
+            n = self.policy.workers_to_resume(
+                self._n_active, n_idle, ready_tasks)
+            if n <= 0:
+                return []
             idle = self.wake_first([w for w, s in self._states.items()
                                     if s is WorkerState.IDLE])
-            n = self.policy.workers_to_resume(
-                self._active_locked(), len(idle), ready_tasks)
-            woken = idle[:max(0, n)]
+            woken = idle[:n]
             for w in woken:
                 self._set(w, WorkerState.SPIN)
                 self._spin_counts[w] = 0
@@ -252,7 +360,9 @@ class WorkerManager:
         ``power``/``core_type`` carry the borrowed core's identity on
         heterogeneous machines so its energy is billed correctly."""
         with self._lock:
+            prev = self._states.get(worker_id)
             self._states[worker_id] = WorkerState.SPIN
+            self._count(worker_id, prev, WorkerState.SPIN)
             self._spin_counts[worker_id] = 0
             if self.energy is not None:
                 self.energy.add_core(worker_id, CoreState.SPIN,
@@ -271,7 +381,9 @@ class WorkerManager:
             if worker_id in self._states and self.energy is not None:
                 self.energy.set_state(worker_id, CoreState.OFF,
                                       self.clock())
-            self._states.pop(worker_id, None)
+            prev = self._states.pop(worker_id, None)
+            if prev is not None:
+                self._count(worker_id, prev, None)
             self._spin_counts.pop(worker_id, None)
 
     def reclaim(self, worker_id: int) -> None:

@@ -168,6 +168,14 @@ class TaskMonitor:
         self._outstanding: dict[int, float] = {}
         self._predicted_at_start: dict[int, float] = {}
         self._subscribed_buses: list[EventBus] = []
+        # Buses whose lifecycle events already reach this monitor through
+        # a direct driver (a Scheduler) — subscribing to one of these
+        # would double-count, so subscribe() no-ops on them.
+        self._direct_buses: list[EventBus] = []
+        #: mutation counter bumped by every lifecycle update — lets the
+        #: predictor skip recomputing Alg. 1 on ticks that fire inside
+        #: an unchanged window (pure function of the snapshot)
+        self.version = 0
         # Worker id → core-type name; set by topology-aware frontends so
         # completion events feed the per-(type × core-type) α_{j,c}.
         self._core_type_of: Callable[[int], str] | None = None
@@ -194,12 +202,25 @@ class TaskMonitor:
     _LIFECYCLE_KINDS = (EventKind.TASK_READY, EventKind.TASK_EXECUTE,
                         EventKind.TASK_COMPLETED)
 
+    def mark_direct_driven(self, bus: EventBus) -> None:
+        """Record that a producer on ``bus`` (a Scheduler) feeds this
+        monitor directly: a later :meth:`subscribe` on the same bus
+        no-ops instead of double-counting every lifecycle event — the
+        same safety the old monitor-as-subscriber wiring got from
+        subscribe()'s idempotence."""
+        with self._lock:
+            if not any(b is bus for b in self._direct_buses):
+                self._direct_buses.append(bus)
+
     def subscribe(self, bus: EventBus) -> "TaskMonitor":
         """Attach this monitor to ``bus`` (idempotent per bus — e.g. a
         governor-owned monitor handed to a Scheduler that shares the
-        same bus must not double-count events)."""
+        same bus must not double-count events; a bus already direct-
+        driven by a Scheduler is a no-op for the same reason)."""
         with self._lock:
             if any(b is bus for b in self._subscribed_buses):
+                return self
+            if any(b is bus for b in self._direct_buses):
                 return self
             self._subscribed_buses.append(bus)
         bus.subscribe(self._on_event, kinds=self._LIFECYCLE_KINDS)
@@ -258,20 +279,32 @@ class TaskMonitor:
     def on_task_ready(self, task_id: int, type_name: str, cost: float) -> None:
         """Task became ready (dependencies satisfied / created ready)."""
         with self._lock:
+            self._ready_locked(task_id, type_name, cost)
+
+    def _ready_locked(self, task_id: int, type_name: str,
+                      cost: float) -> None:
+        self.version += 1
+        m = self._types.get(type_name)
+        if m is None:
             m = self._metrics(type_name)
-            m.ready_cost += cost
-            m.ready_instances += 1
-            # Record the prediction that Alg. 1 would make for this task
-            # right now; accuracy is evaluated against it on completion.
-            if m.unitary_cost.reliable(self.min_samples):
-                predicted = cost * m.unitary_cost.value
-                self._outstanding[task_id] = predicted
-                self._predicted_at_start[task_id] = predicted
+        m.ready_cost += cost
+        m.ready_instances += 1
+        # Record the prediction that Alg. 1 would make for this task
+        # right now; accuracy is evaluated against it on completion.
+        # (EMA reads inlined — once per task on the hot path.)
+        ema = m.unitary_cost
+        if ema._count >= self.min_samples:
+            predicted = cost * ema._value
+            self._outstanding[task_id] = predicted
+            self._predicted_at_start[task_id] = predicted
 
     def on_task_execute(self, task_id: int, type_name: str, cost: float) -> None:
         """Task moved ready → executing."""
         with self._lock:
-            m = self._metrics(type_name)
+            self.version += 1
+            m = self._types.get(type_name)
+            if m is None:
+                m = self._metrics(type_name)
             m.ready_cost -= cost
             m.ready_instances -= 1
             m.executing_cost += cost
@@ -288,31 +321,68 @@ class TaskMonitor:
         stores the full-speed cost (``elapsed · freq``), keeping the
         planner's capacity math frequency-independent."""
         with self._lock:
+            self._completed_locked(task_id, type_name, cost, elapsed,
+                                   parent_id, core_type, freq)
+
+    def _completed_locked(self, task_id: int, type_name: str, cost: float,
+                          elapsed: float, parent_id: int | None,
+                          core_type: str | None, freq: float) -> None:
+        self.version += 1
+        m = self._types.get(type_name)
+        if m is None:
             m = self._metrics(type_name)
-            m.executing_cost -= cost
-            m.executing_instances -= 1
-            m.completed += 1
-            if elapsed > 0.0 and cost > 0.0:
-                m.unitary_cost.update(elapsed / cost)
-                if core_type is not None:
-                    ema = m.per_core.get(core_type)
-                    if ema is None:
-                        ema = m.per_core[core_type] = EMA(self._decay,
-                                                          self._warmup)
-                    ema.update(elapsed * freq / cost)
-            # Accuracy (Table 2): compare against prediction-at-ready.
-            predicted = self._predicted_at_start.pop(task_id, None)
-            self._outstanding.pop(task_id, None)
-            if predicted is not None and predicted > 0.0 and elapsed > 0.0:
-                acc = 100.0 * (1.0 - abs(predicted - elapsed)
-                               / max(predicted, elapsed))
-                m.acc_sum += acc
-                m.acc_count += 1
-            # Parent–child link: the child's measured time no longer
-            # belongs to the parent's outstanding predicted time.
-            if parent_id is not None and parent_id in self._outstanding:
-                self._outstanding[parent_id] = max(
-                    0.0, self._outstanding[parent_id] - elapsed)
+        m.executing_cost -= cost
+        m.executing_instances -= 1
+        m.completed += 1
+        if elapsed > 0.0 and cost > 0.0:
+            m.unitary_cost.update(elapsed / cost)
+            if core_type is not None:
+                ema = m.per_core.get(core_type)
+                if ema is None:
+                    ema = m.per_core[core_type] = EMA(self._decay,
+                                                      self._warmup)
+                ema.update(elapsed * freq / cost)
+        # Accuracy (Table 2): compare against prediction-at-ready.
+        predicted = self._predicted_at_start.pop(task_id, None)
+        self._outstanding.pop(task_id, None)
+        if predicted is not None and predicted > 0.0 and elapsed > 0.0:
+            acc = 100.0 * (1.0 - abs(predicted - elapsed)
+                           / max(predicted, elapsed))
+            m.acc_sum += acc
+            m.acc_count += 1
+        # Parent–child link: the child's measured time no longer
+        # belongs to the parent's outstanding predicted time.
+        if parent_id is not None and parent_id in self._outstanding:
+            self._outstanding[parent_id] = max(
+                0.0, self._outstanding[parent_id] - elapsed)
+
+    def completion_batch(self, task, elapsed: float,
+                         worker_id: int | None,
+                         parent_id: int | None, newly_ready) -> None:
+        """Fold one completion plus the tasks it made ready into the
+        aggregates under a *single* lock acquisition — the hot-path entry
+        the :class:`~repro.runtime.scheduler.Scheduler` drives directly
+        (per-event bus dispatch paid one event object + one lock
+        round-trip for each of the 1 + N transitions).
+
+        ``task``/``newly_ready`` items are duck-typed (``task_id``,
+        ``type_name``, ``cost`` attributes) so the monitor keeps no
+        dependency on the runtime layer.  Readies are applied *before*
+        the completion — the same order the per-event path produced
+        (successors enter the ready queue before the finisher's α
+        update), which parity tests pin bit-for-bit.
+        """
+        core_type = (self._core_type_of(worker_id)
+                     if (self._core_type_of is not None
+                         and worker_id is not None) else None)
+        freq = (self._freq_of(worker_id)
+                if (self._freq_of is not None
+                    and worker_id is not None) else 1.0)
+        with self._lock:
+            for t in newly_ready:
+                self._ready_locked(t.task_id, t.type_name, t.cost)
+            self._completed_locked(task.task_id, task.type_name, task.cost,
+                                   elapsed, parent_id, core_type, freq)
 
     # -- snapshot for the predictor (Alg. 1 inputs) --------------------------
 
@@ -329,14 +399,18 @@ class TaskMonitor:
         out = []
         with self._lock:
             for name, m in self._types.items():
-                if m.live_instances <= 0:
+                # inlined live_instances/live_cost/EMA reads — this runs
+                # once per prediction tick with the lock held
+                live = m.ready_instances + m.executing_instances
+                if live <= 0:
                     continue
+                ema = m.unitary_cost
                 out.append((
                     name,
-                    m.live_cost,
-                    m.unitary_cost.value,
-                    m.live_instances,
-                    m.unitary_cost.reliable(k),
+                    m.ready_cost + m.executing_cost,
+                    ema._value,
+                    live,
+                    ema._count >= k,
                 ))
         return out
 
@@ -361,6 +435,37 @@ class TaskMonitor:
                                    for c, e in m.per_core.items()},
                 ))
         return out
+
+    def fold_gamma(self, k: int, rate_s: float, count_based_only: bool,
+                   limit: float | None) -> tuple[float, int]:
+        """Fused Algorithm-1 γ accumulation — one pass over the live
+        types under one lock, no snapshot list.  This is the predictor's
+        per-tick hot path; :meth:`workload_snapshot` remains the
+        observable (list-building) form.
+
+        Returns ``(γ, total_live_instances)``.  ``limit`` is the
+        paper's early-exit bound (``while γ < N_CPUs``); None disables
+        it (oversubscribing DLB mode).  Term order and arithmetic match
+        :meth:`~repro.core.prediction.CPUPredictor.compute_delta`'s
+        original snapshot loop exactly.
+        """
+        gamma = 0.0
+        total = 0
+        with self._lock:
+            for m in self._types.values():
+                live = m.ready_instances + m.executing_instances
+                if live <= 0:
+                    continue
+                total += live
+                if limit is not None and gamma >= limit:
+                    continue
+                ema = m.unitary_cost
+                if count_based_only or ema._count < k:
+                    gamma += live
+                else:
+                    gamma += ((m.ready_cost + m.executing_cost)
+                              * ema._value) / rate_s
+        return gamma, total
 
     def outstanding_seconds(self, min_samples: int | None = None) -> tuple[float, int, int]:
         """Aggregate (predicted_seconds, live_instances, unreliable_instances).

@@ -55,6 +55,12 @@ class Policy(ABC):
     name: str = "abstract"
     #: whether the executor should drive predictor ticks for this policy
     uses_predictions: bool = False
+    #: True ⇔ :meth:`on_poll_empty` ignores ``worker_id`` and
+    #: ``spin_count`` — the decision is a pure function of ``active``.
+    #: Lets tick-time re-evaluation loops stop at the first SPIN verdict
+    #: (every remaining spinner would get the identical answer, and the
+    #: skipped spin-count increments are unread by such policies).
+    poll_uniform: bool = False
 
     @abstractmethod
     def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
@@ -88,6 +94,7 @@ class Policy(ABC):
 
 class BusyPolicy(Policy):
     name = "busy"
+    poll_uniform = True
 
     def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
                       ) -> PollDecision:
@@ -160,6 +167,7 @@ class PredictionPolicy(Policy):
 
     name = "prediction"
     uses_predictions = True
+    poll_uniform = True
 
     def __init__(self, predictor: CPUPredictor) -> None:
         self.predictor = predictor
@@ -210,6 +218,8 @@ class HeteroPredictionPolicy(PredictionPolicy):
     """
 
     name = "hetero-prediction"
+    #: decisions depend on the polling worker's core type — NOT uniform
+    poll_uniform = False
 
     def __init__(self, predictor: CPUPredictor) -> None:
         super().__init__(predictor)

@@ -133,26 +133,23 @@ class CPUPredictor:
                 freq={t.name: t.max_freq for t in topology.types})
         self._lock = threading.Lock()
         self.predictions_made = 0
+        # tick() memo: last monitor version the delta/plan was computed
+        # against (-1 ⇒ never computed).
+        self._memo_version = -1
+        self._memo_valid = False
 
     # -- Algorithm 1 ---------------------------------------------------------
 
     def compute_delta(self, n_cpus: int | None = None) -> int:
-        """One evaluation of Algorithm 1 against the monitor's snapshot."""
+        """One evaluation of Algorithm 1 against the monitor's workload
+        aggregates (fused single pass — see
+        :meth:`~repro.core.monitoring.TaskMonitor.fold_gamma`; the
+        early-exit bound is the paper's ``while (γ < N_CPUs)``)."""
         cfg = self.config
         n = self.n_cpus if n_cpus is None else n_cpus
-        gamma = 0.0
-        total_instances = 0
-        snapshot = self.monitor.workload_snapshot(cfg.min_samples)
-        for _name, w_cost, alpha, m_j, reliable in snapshot:
-            total_instances += m_j
-            if gamma >= n and not cfg.allow_oversubscription:
-                # paper's early exit: while (γ < N_CPUs)
-                continue
-            if cfg.count_based_only or not reliable:
-                # count-based fallback: one CPU's worth per ready task
-                gamma += m_j
-            else:
-                gamma += (w_cost * alpha) / cfg.rate_s
+        gamma, total_instances = self.monitor.fold_gamma(
+            cfg.min_samples, cfg.rate_s, cfg.count_based_only,
+            limit=None if cfg.allow_oversubscription else n)
         if total_instances == 0:
             # No live work: keep one CPU awake to pick up new work
             # (Alg. 1 ensures 0 < Δ).
@@ -332,38 +329,58 @@ class CPUPredictor:
     # -- atomic Δ (read by Alg. 2) --------------------------------------------
 
     def tick(self) -> int:
-        """Recompute Δ (called at the prediction rate) and publish it."""
+        """Recompute Δ (called at the prediction rate) and publish it.
+
+        Memoized on the monitor's mutation version: Algorithm 1 is a
+        pure function of the workload snapshot, so a tick that fires
+        with no monitor change since the last one (an idle or spin-only
+        window) reuses the previous Δ/plan instead of re-walking the
+        snapshot — numerically identical, since recomputing over the
+        same inputs returns the same result.
+        """
+        # Single-writer discipline: tick() is only ever called from one
+        # thread (the sim loop / the executor's ticker), and the
+        # int/reference stores below are atomic for readers — no lock.
+        version = self.monitor.version
         if self.topology is not None:
-            plan = self.compute_plan()
-            with self._lock:
+            plan = self._plan
+            if version != self._memo_version or plan is None:
+                plan = self.compute_plan()
+                self._memo_version = version
                 self._plan = plan
                 self._delta = plan.delta
-                self.predictions_made += 1
-            return plan.delta
-        delta = self.compute_delta()
-        with self._lock:
-            self._delta = delta
             self.predictions_made += 1
+            return plan.delta
+        delta = self._delta
+        if version != self._memo_version or not self._memo_valid:
+            delta = self.compute_delta()
+            self._memo_version = version
+            self._memo_valid = True
+            self._delta = delta
+        self.predictions_made += 1
         return delta
 
     @property
     def delta(self) -> int:
-        with self._lock:
-            return self._delta
+        # Lock-free read: Δ is the paper's "atomic" — it is read on
+        # every empty poll, and a plain int load is atomic in CPython.
+        return self._delta
 
     @property
     def plan(self) -> HeteroPlan | None:
-        with self._lock:
-            return self._plan
+        return self._plan
 
     @property
     def delta_by_type(self) -> dict[str, int]:
-        """Per-core-type Δ_c split ({} without a topology)."""
-        with self._lock:
-            return dict(self._plan.by_type) if self._plan else {}
+        """Per-core-type Δ_c split ({} without a topology).  The live
+        plan dict — read-only for callers (it is replaced wholesale, not
+        mutated, on each tick)."""
+        plan = self._plan
+        return plan.by_type if plan else {}
 
     @property
     def freq_by_type(self) -> dict[str, float]:
-        """Recommended DVFS step per core type ({} without a topology)."""
-        with self._lock:
-            return dict(self._plan.freq) if self._plan else {}
+        """Recommended DVFS step per core type ({} without a topology).
+        Read-only view, same contract as :attr:`delta_by_type`."""
+        plan = self._plan
+        return plan.freq if plan else {}

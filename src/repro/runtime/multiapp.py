@@ -54,7 +54,7 @@ def solo_job_spec(spec: SimJobSpec, graph: TaskGraph) -> SimJobSpec:
 def run_multi_app(machine: MachineModel, specs: Iterable[SimJobSpec], *,
                   broker: ResourceBroker | None = None,
                   solo_graphs: Mapping[str, TaskGraph] | None = None,
-                  ) -> MultiAppReport:
+                  threadsafe: bool = False) -> MultiAppReport:
     """Co-schedule ``specs`` on ``machine`` through one broker/arbiter.
 
     Every spec must pin its CPU partition (``spec.cpus``) — silent
@@ -80,7 +80,7 @@ def run_multi_app(machine: MachineModel, specs: Iterable[SimJobSpec], *,
         seen |= set(spec.cpus)
     if broker is None:
         broker = ResourceBroker()
-    cluster = SimCluster(machine, broker=broker)
+    cluster = SimCluster(machine, broker=broker, threadsafe=threadsafe)
     for spec in specs:
         cluster.add_job(spec)
     reports = cluster.run()
@@ -91,7 +91,7 @@ def run_multi_app(machine: MachineModel, specs: Iterable[SimJobSpec], *,
             graph = solo_graphs.get(spec.name)
             if graph is None:
                 continue
-            solo_cluster = SimCluster(machine)
+            solo_cluster = SimCluster(machine, threadsafe=threadsafe)
             solo_cluster.add_job(solo_job_spec(spec, graph))
             solo[spec.name] = solo_cluster.run()[spec.name]
     return MultiAppReport.build(reports, broker.total_calls, solo or None)

@@ -56,6 +56,8 @@ SimReport = GovernorReport
 # Event kinds (sorted lexically only via seq tiebreak; kind order irrelevant)
 _FINISH, _TICK, _RESUME, _SPIN_EXPIRE, _ARRIVE = range(5)
 
+_heappush = heapq.heappush
+
 
 @dataclass
 class SimJobSpec:
@@ -103,6 +105,12 @@ class SimJobSpec:
 
 
 class _SimJob:
+    __slots__ = (
+        "cluster", "spec", "name", "graph", "bus", "cpus", "governor",
+        "monitor", "scheduler", "predictor", "policy", "energy",
+        "manager", "sharing", "rate_s", "epoch", "waking", "borrowed",
+        "t_done", "monitor_events", "arrivals_pending", "spin_budget")
+
     def __init__(self, cluster: "SimCluster", spec: SimJobSpec,
                  cpus: list[int]) -> None:
         self.cluster = cluster
@@ -145,7 +153,8 @@ class _SimJob:
             worker_ids=list(cpus), t0=cluster.now, bus=self.bus)
         self.monitor = self.governor.monitor
         self.scheduler = Scheduler(self.monitor, bus=self.bus,
-                                   clock=lambda: cluster.now)
+                                   clock=lambda: cluster.now,
+                                   threadsafe=cluster.threadsafe)
         self.predictor = self.governor.predictor
         self.policy = self.governor.policy
         self.energy = self.governor.energy
@@ -161,6 +170,10 @@ class _SimJob:
         #: an open job is done only when arrivals are exhausted AND the
         #: scheduler drained.
         self.arrivals_pending = 0
+        #: hoisted once — ``getattr(policy, "spin_budget", ...)`` sat on
+        #: the per-empty-poll path
+        self.spin_budget: int | None = getattr(self.policy, "spin_budget",
+                                               None)
 
     @property
     def done(self) -> bool:
@@ -170,18 +183,28 @@ class _SimJob:
         # wake_first order: on heterogeneous machines ready work is
         # dispatched to the fastest spinning cores first (identity order
         # on homogeneous machines)
-        return self.manager.wake_first(
-            [w for w, s in self.manager.states().items()
-             if s is WorkerState.SPIN and w not in self.waking])
+        return self.manager.spinning(exclude=self.waking)
 
 
 class SimCluster:
-    """Event loop over one machine shared by one or more jobs."""
+    """Event loop over one machine shared by one or more jobs.
+
+    ``threadsafe=False`` (the default — the event loop is the only
+    thread that ever touches the per-job schedulers) selects the
+    lock-free sequential :class:`~repro.runtime.scheduler.Scheduler`
+    fast path; ``threadsafe=True`` runs the locked reference scheduler
+    instead.  Both paths execute the identical decision logic in the
+    identical order — ``tests/test_simperf.py`` pins byte-identical
+    traces and bit-identical reports across the two for every
+    registered policy.
+    """
 
     def __init__(self, machine: MachineModel,
-                 broker: ResourceBroker | None = None) -> None:
+                 broker: ResourceBroker | None = None,
+                 threadsafe: bool = False) -> None:
         self.machine = machine
         self.broker = broker
+        self.threadsafe = threadsafe
         self.arbiter: ClusterArbiter | None = None
         if broker is not None:
             topo = None
@@ -193,9 +216,22 @@ class SimCluster:
                 topo = machine.topology()
             self.arbiter = ClusterArbiter(broker, topology=topo)
         self.now = 0.0
-        self._heap: list[tuple[float, int, int, Any]] = []
+        #: per-task fast path: homogeneous machines divide service times
+        #: by one constant (None on machines with typed cores)
+        self._flat_speed = (machine.core_speed
+                            if machine.core_types is None else None)
+        # Flattened heap entries (t, seq, kind, a, b, c, d): pushing one
+        # event allocates a single tuple — no nested payload tuple — and
+        # the unique seq tiebreak guarantees comparisons never reach the
+        # (unorderable) job/task objects behind it.
+        self._heap: list[tuple] = []
         self._seq = itertools.count()
+        self._next_seq = self._seq.__next__
         self.jobs: dict[str, _SimJob] = {}
+        self._undone = 0
+        #: events drained by the last :meth:`run` (throughput metric for
+        #: ``benchmarks/bench_simperf.py``)
+        self.events_processed = 0
 
     # -- setup ----------------------------------------------------------------
 
@@ -212,8 +248,9 @@ class SimCluster:
             self.arbiter.register(spec.name, job.governor)
         return job
 
-    def _push(self, t: float, kind: int, payload: Any) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+    def _push(self, t: float, kind: int, a: Any = None, b: Any = None,
+              c: Any = None, d: Any = None) -> None:
+        _heappush(self._heap, (t, self._next_seq(), kind, a, b, c, d))
 
     # -- main loop --------------------------------------------------------------
 
@@ -226,26 +263,37 @@ class SimCluster:
             for w in job.spinning_workers():
                 self._poll(job, w)
             if job.policy.uses_predictions:
-                self._push(self.now + job.rate_s, _TICK, job.name)
+                self._push(self.now + job.rate_s, _TICK, job)
+        # Specialized drain loop: heappop and the bound handlers are
+        # hoisted into locals, dispatch is a kind-indexed if/elif over
+        # ints, and termination is a counter decremented when a job
+        # drains (`all(j.done ...)` re-walked every job per event).
+        self._undone = sum(1 for j in self.jobs.values() if not j.done)
         events = 0
-        while self._heap:
+        heap = self._heap
+        pop = heapq.heappop
+        on_finish = self._on_finish
+        on_tick = self._on_tick
+        on_resume = self._on_resume
+        on_spin_expire = self._on_spin_expire
+        on_arrive = self._on_arrive
+        while heap and self._undone:
             events += 1
             if events > max_events:
                 raise RuntimeError("simulator exceeded max_events")
-            t, _, kind, payload = heapq.heappop(self._heap)
+            t, _, kind, a, b, c, d = pop(heap)
             self.now = t
             if kind == _FINISH:
-                self._on_finish(*payload)
-            elif kind == _TICK:
-                self._on_tick(payload)
+                on_finish(a, b, c, d)
             elif kind == _RESUME:
-                self._on_resume(*payload)
+                on_resume(a, b)
+            elif kind == _TICK:
+                on_tick(a)
             elif kind == _SPIN_EXPIRE:
-                self._on_spin_expire(*payload)
-            elif kind == _ARRIVE:
-                self._on_arrive(*payload)
-            if all(j.done for j in self.jobs.values()):
-                break
+                on_spin_expire(a, b, c)
+            else:
+                on_arrive(a, b)
+        self.events_processed = events
         reports = {}
         for job in self.jobs.values():
             if not job.done:
@@ -255,12 +303,6 @@ class SimCluster:
             t_end = job.t_done if job.t_done is not None else self.now
             job.energy.finish(t_end)
             reports[job.name] = self._report(job)
-        for job in self.jobs.values():
-            # Per-run monitors must not stay subscribed to a bus that
-            # outlives the run (a reused SimExecutor keeps one bus
-            # across runs); external subscribers (recorders) remain.
-            if job.monitor is not None:
-                job.monitor.unsubscribe(job.bus)
         return reports
 
     def _report(self, job: _SimJob) -> SimReport:
@@ -275,23 +317,27 @@ class SimCluster:
         )
 
     def _submit_or_schedule(self, job: _SimJob) -> None:
-        """Closed tasks go to the scheduler at t=0; tasks with a release
-        time (from ``spec.arrivals`` or pre-stamped, e.g. by a replayed
-        trace) become ``_ARRIVE`` events on the virtual timeline."""
+        """Closed tasks go to the scheduler at t=0 (one batched
+        ``submit_all``); tasks with a release time (from
+        ``spec.arrivals`` or pre-stamped, e.g. by a replayed trace)
+        become ``_ARRIVE`` events on the virtual timeline."""
         if job.spec.arrivals is not None:
             job.spec.arrivals.assign(job.graph.tasks)
+        now = self.now
+        closed = []
         for task in job.graph.tasks:
             rt = task.release_time
-            if rt is None or rt <= self.now:
-                job.scheduler.submit(task)
+            if rt is None or rt <= now:
+                closed.append(task)
             else:
                 job.arrivals_pending += 1
-                self._push(rt, _ARRIVE, (job.name, task))
+                self._push(rt, _ARRIVE, job, task)
+        if closed:
+            job.scheduler.submit_all(closed)
 
     # -- event handlers -----------------------------------------------------------
 
-    def _on_arrive(self, job_name: str, task: Task) -> None:
-        job = self.jobs[job_name]
+    def _on_arrive(self, job: _SimJob, task: Task) -> None:
         job.arrivals_pending -= 1
         if job.bus.interested(EventKind.TASK_ARRIVED):
             job.bus.publish(RuntimeEvent(
@@ -302,22 +348,23 @@ class SimCluster:
         if became_ready:
             self._work_added(job)
 
-    def _on_finish(self, job_name: str, cpu: int, task: Task,
+    def _on_finish(self, job: _SimJob, cpu: int, task: Task,
                    elapsed: float) -> None:
-        job = self.jobs[job_name]
         job.manager.task_finished(cpu)
         newly = job.scheduler.complete(task, elapsed, worker_id=cpu)
         if job.monitor is not None:
             job.monitor_events += 3  # ready/execute/complete round trip
-        if job.done:
+        # inline job.done (a property + drained() call per finish)
+        if job.arrivals_pending == 0 and job.scheduler._pending == 0:
             job.t_done = self.now
+            self._undone -= 1
             if self.broker is not None:
                 # a finished app claims nothing: drop any fairness
                 # reservation its last short acquire registered
                 self.broker.register_demand(job.name, 0)
         if newly:
             self._work_added(job)
-        if job.manager.states().get(cpu) is not WorkerState.SPIN:
+        if job.manager.state_of(cpu) is not WorkerState.SPIN:
             # _work_added's instant dispatch already handed this worker a
             # new task (it was spinning the moment the queue refilled).
             return
@@ -340,24 +387,51 @@ class SimCluster:
             n_calls = self.broker.job_calls(job.name) - before
             if n_calls:
                 self._push(self.now + n_calls * self.machine.dlb_call_overhead,
-                           _RESUME, (job.name, cpu))
+                           _RESUME, job, cpu)
                 return
         self._poll(job, cpu)
 
-    def _on_tick(self, job_name: str) -> None:
-        job = self.jobs[job_name]
-        if job.done:
+    def _on_tick(self, job: _SimJob) -> None:
+        # inline job.done — this gate runs once per tick
+        if job.arrivals_pending == 0 and job.scheduler._pending == 0:
             return  # stop rescheduling; lets the loop terminate
         job.governor.tick()
         # Trim: re-evaluate spinning workers against the fresh Δ, in
         # park order (spinning_workers is wake/dispatch-ordered — using
-        # it here would park the fastest cores first).
-        for w in job.manager.park_first(job.spinning_workers()):
-            if job.scheduler.ready_count > 0:
-                break
-            decision = job.manager.poll_empty(w)
-            if decision is PollDecision.LEND:
-                self._lend(job, w)
+        # it here would park the fastest cores first).  With ready work
+        # queued the loop body is a guaranteed immediate break, so skip
+        # building the spinner list at all.
+        if job.scheduler.ready_count == 0:
+            uniform = job.policy.poll_uniform
+            mgr = job.manager
+            if not job.sharing and not mgr._park_rank:
+                # Homogeneous non-sharing trim: park order is dict order
+                # and decisions can only SPIN (value mutation of the
+                # visited key — iteration-safe) or IDLE, so the spinner
+                # list need not be materialized.  With a uniform policy
+                # the loop typically stops at the very first verdict —
+                # this path runs once per tick, the hottest line of
+                # tick-dominated sims.
+                waking = job.waking
+                spin = WorkerState.SPIN
+                poll_empty = mgr.poll_empty
+                for w, s in mgr._states.items():
+                    if s is not spin or w in waking:
+                        continue
+                    decision = poll_empty(w)
+                    if decision is PollDecision.SPIN and uniform:
+                        break
+            else:
+                for w in mgr.park_first(job.spinning_workers()):
+                    if job.scheduler.ready_count > 0:
+                        break
+                    decision = mgr.poll_empty(w)
+                    if decision is PollDecision.LEND:
+                        self._lend(job, w)
+                    elif decision is PollDecision.SPIN and uniform:
+                        # uniform policies answer SPIN identically for
+                        # every remaining spinner (δ unchanged by SPIN)
+                        break
         # Grow: resume idle workers / acquire broker CPUs — one call.
         ready = job.scheduler.ready_count
         if ready > 0:
@@ -373,23 +447,21 @@ class SimCluster:
             if plan is not None:
                 self.arbiter.execute(plan,
                                      lambda c: self._hand_cpu_to(job, c))
-        self._push(self.now + job.rate_s, _TICK, job.name)
+        self._push(self.now + job.rate_s, _TICK, job)
 
-    def _on_resume(self, job_name: str, cpu: int) -> None:
-        job = self.jobs[job_name]
+    def _on_resume(self, job: _SimJob, cpu: int) -> None:
         job.waking.discard(cpu)
-        if job.manager.states().get(cpu) is WorkerState.SPIN:
+        if job.manager.state_of(cpu) is WorkerState.SPIN:
             self._poll(job, cpu)
 
-    def _on_spin_expire(self, job_name: str, cpu: int, epoch: int) -> None:
-        job = self.jobs[job_name]
+    def _on_spin_expire(self, job: _SimJob, cpu: int, epoch: int) -> None:
         if job.epoch.get(cpu) != epoch:
             return  # stale: worker ran a task / changed state meanwhile
-        if job.manager.states().get(cpu) is not WorkerState.SPIN:
+        if job.manager.state_of(cpu) is not WorkerState.SPIN:
             return
         if job.scheduler.ready_count > 0:
             return  # work arrived; dispatch already handled it
-        budget = getattr(job.policy, "spin_budget", 1)
+        budget = job.spin_budget if job.spin_budget is not None else 1
         decision = job.manager.poll_empty(cpu, spin_count_override=budget)
         if decision is PollDecision.LEND:
             self._lend(job, cpu)
@@ -403,38 +475,54 @@ class SimCluster:
             return
         decision = job.manager.poll_empty(cpu)
         if decision is PollDecision.SPIN:
-            budget = getattr(job.policy, "spin_budget", None)
+            budget = job.spin_budget
             if budget is not None:
                 job.epoch[cpu] += 1
                 self._push(self.now + budget * self.machine.poll_interval,
-                           _SPIN_EXPIRE, (job.name, cpu, job.epoch[cpu]))
+                           _SPIN_EXPIRE, job, cpu, job.epoch[cpu])
         elif decision is PollDecision.LEND:
             self._lend(job, cpu)
         # IDLE: state transition already applied by the manager.
 
     def _start(self, job: _SimJob, cpu: int, task: Task) -> None:
-        if task.service_time is None:
+        st = task.service_time
+        if st is None:
             raise ValueError(
                 f"task {task.type_name}#{task.task_id} has no service_time "
                 "(required by the simulator)")
-        job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
+        job.epoch[cpu] += 1
         job.manager.task_started(cpu)
-        dur = self.machine.service_time(task.service_time, core=cpu,
-                                        freq=job.governor.frequency_of(cpu))
+        flat = self._flat_speed
+        if flat is not None and not job.governor._freq_cache:
+            # homogeneous machine, no DVFS plan applied: service_time()
+            # would resolve per-core speed and frequency to the same
+            # constants on every single task
+            dur = st / flat
+        else:
+            dur = self.machine.service_time(
+                st, core=cpu, freq=job.governor.frequency_of(cpu))
         if job.monitor is not None:
             dur += 3 * self.machine.monitor_event_overhead
-        self._push(self.now + dur, _FINISH, (job.name, cpu, task, dur))
+        self._push(self.now + dur, _FINISH, job, cpu, task, dur)
 
     def _dispatch(self, job: _SimJob) -> None:
-        """Hand ready tasks to spinning workers instantly."""
-        while job.scheduler.ready_count > 0:
-            spinners = job.spinning_workers()
-            if not spinners:
-                return
-            task = job.scheduler.poll(worker_id=spinners[0])
+        """Hand ready tasks to spinning workers instantly.
+
+        Spinners are consumed lazily: with R ready tasks only the first
+        R spinning workers are ever visited — this loop used to
+        re-filter and re-sort the whole state map (plus re-take the
+        ready-count lock) once per handed-out task.  ``_start`` only
+        flips the dispatched worker's own state, which keeps the lazy
+        iteration valid.
+        """
+        sched = job.scheduler
+        if sched.ready_count == 0:
+            return
+        for w in job.manager.iter_spinning(exclude=job.waking):
+            task = sched.poll(worker_id=w)
             if task is None:
                 return
-            self._start(job, spinners[0], task)
+            self._start(job, w, task)
 
     def _work_added(self, job: _SimJob) -> None:
         self._dispatch(job)
@@ -454,7 +542,7 @@ class SimCluster:
         for w in woken:
             job.waking.add(w)
             self._push(self.now + self.machine.resume_latency, _RESUME,
-                       (job.name, w))
+                       job, w)
 
     # -- DLB mechanics ---------------------------------------------------------------
 
@@ -506,7 +594,7 @@ class SimCluster:
         job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
         job.waking.add(cpu)
         self._push(self.now + self.machine.borrow_latency, _RESUME,
-                   (job.name, cpu))
+                   job, cpu)
 
 
 class SimExecutor:
@@ -516,6 +604,12 @@ class SimExecutor:
     :func:`dataclasses.replace`, so no state (graph, arrivals) leaks
     across runs.  ``self.bus`` is stable across runs — attach a
     :class:`~repro.trace.TraceRecorder` to it before calling :meth:`run`.
+
+    ``threadsafe=False`` (default) runs the lock-free sequential
+    scheduler fast path; pass ``threadsafe=True`` for the locked
+    reference (observationally identical — see README "Performance").
+    ``self.last_events_processed`` records the event count of the last
+    run (the throughput benchmarks' denominator).
     """
 
     def __init__(self, machine: MachineModel, policy: str = "busy",
@@ -525,8 +619,11 @@ class SimExecutor:
                  min_samples: int = DEFAULT_MIN_SAMPLES,
                  power: PowerModel | None = None,
                  spec: GovernorSpec | None = None,
-                 bus: EventBus | None = None) -> None:
+                 bus: EventBus | None = None,
+                 threadsafe: bool = False) -> None:
         self.machine = machine
+        self.threadsafe = threadsafe
+        self.last_events_processed = 0
         self.bus = bus if bus is not None else EventBus()
         if spec is not None:
             self.spec = SimJobSpec(name="job0", graph=TaskGraph(),
@@ -546,6 +643,9 @@ class SimExecutor:
         spec = replace(self.spec, graph=graph,
                        arrivals=(arrivals if arrivals is not None
                                  else self.spec.arrivals))
-        cluster = SimCluster(self.machine)
+        cluster = SimCluster(self.machine, threadsafe=self.threadsafe)
         cluster.add_job(spec)
-        return cluster.run()[spec.name]
+        try:
+            return cluster.run()[spec.name]
+        finally:
+            self.last_events_processed = cluster.events_processed

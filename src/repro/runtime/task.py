@@ -23,7 +23,7 @@ __all__ = ["Task", "TaskGraph"]
 _ids = itertools.count()
 
 
-@dataclass(eq=False)
+@dataclass(eq=False, slots=True)
 class Task:
     type_name: str
     cost: float = 1.0

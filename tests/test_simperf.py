@@ -1,0 +1,266 @@
+"""Fast-path parity + throughput pins for the simulator hot-path overhaul.
+
+The sequential scheduler (``threadsafe=False``, the simulator default)
+must be *observationally invisible*: same seed ⇒ byte-identical trace
+JSONL and bit-identical ``GovernorReport``\\ s against the locked
+reference (``threadsafe=True``) for every registered policy.  On top of
+that, the committed ``BENCH_simperf.json`` pins the throughput floor —
+a future PR that regresses recorded events/sec by more than 30% (in
+machine-normalized terms) fails here.
+"""
+
+from __future__ import annotations
+
+import gc
+import itertools
+import json
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import EventBus, EventKind, RuntimeEvent
+from repro.core.governor import policy_entry, registered_policies
+from repro.core.sharing import ResourceBroker
+from repro.runtime import HYBRID_PE, MN4, MachineModel, SimCluster, SimJobSpec
+from repro.runtime.scheduler import Scheduler, _SeqScheduler
+from repro.runtime.task import Task, TaskGraph
+from repro.trace import TraceRecorder
+from repro.workloads.cholesky import build_cholesky
+
+import repro.runtime.task as task_mod
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_simperf.json"
+
+M8 = MachineModel(name="M8", n_cores=8)
+
+
+def _fresh_graph(p: int = 8, seed: int = 0) -> TaskGraph:
+    """Cholesky graph with the global task-id counter reset, so two
+    builds produce identical task ids (trace bytes compare equal)."""
+    task_mod._ids = itertools.count()
+    return build_cholesky("fine", p=p, seed=seed)
+
+
+def _run_single(policy: str, threadsafe: bool, tmp_path: Path,
+                tag: str) -> tuple[dict, Path]:
+    machine = HYBRID_PE if policy_entry(policy).needs_topology else M8
+    graph = _fresh_graph()
+    cluster = SimCluster(machine, threadsafe=threadsafe)
+    job = cluster.add_job(SimJobSpec(name="job0", graph=graph,
+                                     policy=policy))
+    rec = TraceRecorder(job.bus)
+    reports = cluster.run()
+    path = tmp_path / f"{tag}.jsonl"
+    rec.to_jsonl(path)
+    rec.detach()
+    return reports, path
+
+
+def _run_sharing(policy: str, threadsafe: bool, tmp_path: Path,
+                 tag: str) -> tuple[dict, Path]:
+    task_mod._ids = itertools.count()
+    g0 = build_cholesky("fine", p=8, seed=0)
+    g1 = build_cholesky("fine", p=6, seed=1)
+    cluster = SimCluster(M8, broker=ResourceBroker(),
+                         threadsafe=threadsafe)
+    j0 = cluster.add_job(SimJobSpec(name="a", graph=g0, policy=policy,
+                                    cpus=list(range(0, 4))))
+    j1 = cluster.add_job(SimJobSpec(name="b", graph=g1, policy=policy,
+                                    cpus=list(range(4, 8))))
+    rec = TraceRecorder(j0.bus)
+    rec.attach(j1.bus)
+    reports = cluster.run()
+    path = tmp_path / f"{tag}.jsonl"
+    rec.to_jsonl(path)
+    rec.detach()
+    return reports, path
+
+
+@pytest.mark.parametrize("policy", registered_policies())
+def test_fast_path_parity_all_policies(policy, tmp_path):
+    """threadsafe on/off ⇒ equal GovernorReports AND byte-identical
+    trace JSONL, for every registered policy (sharing policies run as a
+    two-job broker cluster — they deadlock without a co-tenant)."""
+    runner = (_run_sharing if policy_entry(policy).sharing
+              else _run_single)
+    rep_fast, trace_fast = runner(policy, False, tmp_path, "fast")
+    rep_ref, trace_ref = runner(policy, True, tmp_path, "ref")
+    assert rep_fast == rep_ref
+    assert trace_fast.read_bytes() == trace_ref.read_bytes()
+
+
+def test_seq_scheduler_selected_by_flag():
+    assert isinstance(Scheduler(threadsafe=False), _SeqScheduler)
+    assert not isinstance(Scheduler(), _SeqScheduler)
+    assert type(Scheduler()) is Scheduler
+
+
+class TestSubmitAllBatched:
+    """Satellite: ``submit_all`` takes the lock once per batch — and
+    stays equivalent to task-by-task ``submit`` on a 10k-task graph."""
+
+    N = 10_000
+
+    def _chain(self) -> list[Task]:
+        task_mod._ids = itertools.count()
+        tasks = []
+        prev = None
+        for i in range(self.N):
+            t = Task("w", cost=1.0, service_time=1e-6,
+                     deps=[prev] if prev is not None and i % 7 == 0
+                     else [])
+            tasks.append(t)
+            prev = t
+        return tasks
+
+    @pytest.mark.parametrize("threadsafe", [True, False])
+    def test_matches_per_task_submit(self, threadsafe):
+        batched = Scheduler(threadsafe=threadsafe)
+        n_batched = batched.submit_all(self._chain())
+        onebyone = Scheduler(threadsafe=threadsafe)
+        n_single = 0
+        for t in self._chain():
+            n_single += onebyone.submit(t)
+        assert n_batched == n_single
+        assert batched.pending == onebyone.pending == self.N
+        assert batched.ready_count == onebyone.ready_count == n_batched
+        # drain both identically
+        a = batched.poll()
+        b = onebyone.poll()
+        assert (a.task_id, a.type_name) == (b.task_id, b.type_name)
+
+
+class TestQuietBusIsFree:
+    """Satellite: one ``interested`` check per event, and publishing on
+    a subscriber-free bus is a guaranteed no-alloc no-op."""
+
+    def test_no_subscribers_no_callbacks_no_allocs(self):
+        bus = EventBus()
+        ev = RuntimeEvent(kind=EventKind.TASK_READY, time=0.0, task_id=1,
+                          type_name="t", cost=1.0)
+        assert not bus.interested(EventKind.TASK_READY)
+        gc.disable()
+        try:
+            bus.publish(ev)  # warm up any lazy state
+            before = sys.getallocatedblocks()
+            for _ in range(1000):
+                bus.publish(ev)
+            delta = sys.getallocatedblocks() - before
+        finally:
+            gc.enable()
+        assert delta <= 2, f"publish allocated {delta} blocks"
+
+    def test_kind_filtered_subscriber_not_invoked_for_other_kinds(self):
+        bus = EventBus()
+        calls = []
+        bus.subscribe(calls.append, kinds=[EventKind.PREDICTION])
+        assert bus.interested(EventKind.PREDICTION)
+        assert not bus.interested(EventKind.TASK_READY)
+        for _ in range(10):
+            bus.publish(RuntimeEvent(kind=EventKind.TASK_READY, time=0.0,
+                                     task_id=1, type_name="t", cost=1.0))
+        assert calls == []
+        bus.publish(RuntimeEvent(kind=EventKind.PREDICTION, time=0.0,
+                                 data={"delta": 1}))
+        assert len(calls) == 1
+
+    def test_interest_union_tracks_unsubscribe(self):
+        bus = EventBus()
+        h = bus.subscribe(lambda e: None, kinds=[EventKind.TASK_READY])
+        assert bus.interested(EventKind.TASK_READY)
+        bus.unsubscribe(h)
+        assert not bus.interested(EventKind.TASK_READY)
+        # all-kinds subscriber makes every kind interesting
+        bus.subscribe(lambda e: None)
+        assert bus.interested(EventKind.WORKER_STATE)
+
+    def test_monitor_subscribe_after_scheduler_no_double_count(self):
+        """A monitor subscription on the scheduler's bus made AFTER
+        construction must not double-count on top of the direct drive
+        (the old monitor-as-subscriber wiring was idempotent here)."""
+        from repro.core import TaskMonitor
+
+        bus = EventBus()
+        mon = TaskMonitor()
+        sched = Scheduler(mon, bus=bus)
+        mon.subscribe(bus)              # late wiring of the same pair
+        sched.submit(Task("a", cost=1.0))
+        assert mon.live_instances() == 1
+
+    def test_scheduler_builds_no_events_without_subscribers(self):
+        """The monitor is driven directly — a monitored-but-untraced
+        run never constructs a RuntimeEvent."""
+        built = []
+        orig_publish = EventBus.publish
+
+        def counting(self, event):
+            built.append(event)
+            return orig_publish(self, event)
+
+        EventBus.publish = counting
+        try:
+            graph = _fresh_graph(p=6)
+            cluster = SimCluster(M8)
+            cluster.add_job(SimJobSpec(name="job0", graph=graph,
+                                       policy="prediction"))
+            reports = cluster.run()
+        finally:
+            EventBus.publish = orig_publish
+        assert reports["job0"].tasks_completed == len(graph.tasks)
+        assert built == []
+
+
+class TestThroughputPins:
+    """The committed BENCH_simperf.json is the contract."""
+
+    @pytest.fixture(scope="class")
+    def bench(self):
+        assert BENCH_PATH.exists(), "BENCH_simperf.json not committed"
+        rows = json.loads(BENCH_PATH.read_text())["rows"]
+        return {(r["scenario"], r["mode"]): r for r in rows}
+
+    def test_committed_speedup_at_least_5x_closed(self, bench):
+        """Acceptance pin: ≥5× events/sec vs the pre-change baseline
+        row on the 100k-task closed scenario."""
+        base = bench[("closed-cholesky-100k/prediction", "baseline")]
+        fast = bench[("closed-cholesky-100k/prediction", "fast")]
+        assert fast["events_per_sec"] >= 5.0 * base["events_per_sec"]
+
+    def test_every_scenario_improved(self, bench):
+        for (scenario, mode), row in bench.items():
+            if mode != "fast":
+                continue
+            base = bench[(scenario, "baseline")]
+            assert row["events_per_sec"] > 2.0 * base["events_per_sec"], \
+                f"{scenario} regressed vs recorded baseline"
+
+    @pytest.mark.slow
+    def test_throughput_floor_renormalized(self, bench):
+        """Re-run the gate scenario and compare *normalized* throughput
+        (events/sec × calibration loop seconds — machine-speed
+        invariant) against the committed row: >30% regression fails."""
+        from benchmarks.bench_simperf import calibrate
+
+        committed = bench[("closed-cholesky-100k/prediction", "fast")]
+        calib_now = min(calibrate() for _ in range(3))
+        eps_now = 0.0
+        for _ in range(3):  # best-of-3, like the committed measurement
+            task_mod._ids = itertools.count()
+            graph = build_cholesky("fine", p=84, seed=0)
+            cluster = SimCluster(MN4)
+            cluster.add_job(SimJobSpec(name="job0", graph=graph,
+                                       policy="prediction"))
+            t0 = time.process_time()
+            cluster.run()
+            cpu = time.process_time() - t0
+            eps_now = max(eps_now, cluster.events_processed / cpu)
+        norm_now = eps_now * calib_now
+        norm_committed = (committed["events_per_sec"]
+                          * committed["calibration"])
+        assert norm_now >= 0.7 * norm_committed, (
+            f"simulator throughput regressed: {eps_now:.0f} ev/s "
+            f"(normalized {norm_now:.0f}) vs committed "
+            f"{committed['events_per_sec']:.0f} ev/s "
+            f"(normalized {norm_committed:.0f})")
