@@ -19,7 +19,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+import traceback
 from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
@@ -57,12 +59,25 @@ def main() -> None:
     if write_json:
         json_dir.mkdir(parents=True, exist_ok=True)
 
+    # A failing section must not abort the others, but it MUST fail the
+    # run: CI used to go green when an early section raised (the later
+    # sections never ran) or would have gone green had we swallowed
+    # errors here.  Run everything, report per section, exit nonzero if
+    # anything failed.
+    failed: list[str] = []
     for name in wanted:
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         print(f"### bench_{name} {CAPTIONS.get(name, '')}"
               + (" [smoke]" if args.smoke else ""))
         t0 = time.time()
-        rows = mod.run(smoke=args.smoke)
+        try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            rows = mod.run(smoke=args.smoke)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            print(f"### bench_{name} FAILED after "
+                  f"{time.time() - t0:.1f}s\n")
+            continue
         elapsed = time.time() - t0
         if write_json and isinstance(rows, list) and rows:
             out = json_dir / f"BENCH_{name}.json"
@@ -71,6 +86,9 @@ def main() -> None:
                  "smoke": args.smoke, "rows": rows}, indent=1))
             print(f"### wrote {out}")
         print(f"### bench_{name} done in {elapsed:.1f}s\n")
+    if failed:
+        print(f"### {len(failed)} section(s) failed: {', '.join(failed)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

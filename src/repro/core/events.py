@@ -29,6 +29,8 @@ import threading
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Iterable, Mapping
 
+from ..analysis import guarded_by
+
 __all__ = ["EventKind", "RuntimeEvent", "EventBus", "QUIET_INTEREST"]
 
 #: the :attr:`EventBus.interest` value of a bus nobody subscribed to —
@@ -91,6 +93,7 @@ class RuntimeEvent:
         return cls(**d)
 
 
+@guarded_by("_subs", "interest")
 class EventBus:
     """Thread-safe pub/sub for :class:`RuntimeEvent`.
 

@@ -29,6 +29,7 @@ import enum
 import threading
 from typing import Callable, Sequence
 
+from ..analysis import guarded_by
 from .energy import CoreState, EnergyMeter
 from .events import EventBus, EventKind, RuntimeEvent
 from .policies import Policy, PollDecision
@@ -57,6 +58,8 @@ for _ws, _cs in _ENERGY_STATE.items():
     _ws._energy = _cs
 
 
+@guarded_by("_states", "_spin_counts", "_n_active", "_n_idle",
+            "_n_active_by_type", "idles", "resumes")
 class WorkerManager:
     """Tracks δ (active workers) and applies policy decisions atomically."""
 
@@ -168,6 +171,25 @@ class WorkerManager:
             if s is spin and w not in exclude:
                 yield w
 
+    def states_items_unlocked(self):
+        """Live ``(worker, state)`` view WITHOUT taking the lock.
+
+        Sanctioned for single-threaded drivers only (the sim event loop
+        owns every thread that touches its manager): ``_states`` is a
+        declared guarded field, and this accessor is the one documented
+        escape hatch — external code must not reach into the dict
+        directly.  Keys are fixed after construction on this path and
+        ``poll_empty`` mutates values only, so iteration is safe.
+        """
+        return self._states.items()
+
+    @property
+    def park_ordered(self) -> bool:
+        """True when a heterogeneous park order was configured.  Set
+        once at construction and immutable, so the unlocked read is
+        safe from any thread."""
+        return bool(self._park_rank)
+
     # -- ordering ------------------------------------------------------------
 
     def _rank(self, worker_id: int) -> int:
@@ -194,6 +216,7 @@ class WorkerManager:
 
     _HOLDING = (WorkerState.ACTIVE, WorkerState.SPIN)
 
+    # analysis: caller-locks
     def _count(self, worker_id: int, prev: WorkerState | None,
                state: WorkerState | None) -> None:
         """Incrementally maintain δ, the idle count and the per-type
@@ -214,7 +237,7 @@ class WorkerManager:
             self._n_active_by_type[ct] = \
                 self._n_active_by_type.get(ct, 0) + d
 
-    def _set(self, worker_id: int, state: WorkerState) -> None:
+    def _set(self, worker_id: int, state: WorkerState) -> None:  # analysis: caller-locks
         # Hot path (two transitions per simulated task): the counter
         # maintenance is _count() inlined, and the bus pre-check reads
         # the cached interest union directly instead of paying a method

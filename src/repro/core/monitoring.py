@@ -29,6 +29,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable
 
+from ..analysis import guarded_by
 from .events import EventBus, EventKind, RuntimeEvent
 
 __all__ = [
@@ -153,6 +154,9 @@ class AccuracyReport:
     average_pct: float | None  # None ⇔ "NA" (no timing predictions made)
 
 
+@guarded_by("_types", "_outstanding", "_predicted_at_start",
+            "_subscribed_buses", "_direct_buses", "version",
+            "_core_type_of", "_freq_of")
 class TaskMonitor:
     """The shared monitoring module (paper Fig. 2, left box)."""
 
@@ -260,7 +264,7 @@ class TaskMonitor:
 
     # -- type helpers ------------------------------------------------------
 
-    def _metrics(self, type_name: str) -> TypeMetrics:
+    def _metrics(self, type_name: str) -> TypeMetrics:  # analysis: caller-locks
         m = self._types.get(type_name)
         if m is None:
             m = TypeMetrics(name=type_name,

@@ -38,10 +38,10 @@ total Δ reproduces the homogeneous Algorithm 1 value exactly.
 from __future__ import annotations
 
 import math
-import threading
 from dataclasses import dataclass, field
 from typing import Mapping
 
+from ..analysis import single_writer
 from .energy import CoreState, PowerModel
 from .monitoring import DEFAULT_MIN_SAMPLES, TaskMonitor
 from .topology import CoreTopology
@@ -101,6 +101,8 @@ class HeteroPlan:
     freq: Mapping[str, float] = field(default_factory=dict)
 
 
+@single_writer("_delta", "_plan", "_memo_version", "_memo_valid",
+               "predictions_made")
 class CPUPredictor:
     """Computes and caches ``Δ``; thread-safe.
 
@@ -131,7 +133,6 @@ class CPUPredictor:
                 delta=n_cpus,
                 by_type={t.name: t.count for t in topology.types},
                 freq={t.name: t.max_freq for t in topology.types})
-        self._lock = threading.Lock()
         self.predictions_made = 0
         # tick() memo: last monitor version the delta/plan was computed
         # against (-1 ⇒ never computed).

@@ -42,6 +42,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable
 
+from ..analysis import guarded_by
 from .policies import Policy, PollDecision
 from .prediction import CPUPredictor
 
@@ -69,6 +70,8 @@ class _JobAccount:
     last_served: int = 0
 
 
+@guarded_by("_jobs", "_pool", "_owner", "_holder", "_return_flags",
+            "total_calls")
 class ResourceBroker:
     """The DLB stand-in: a pool of lent CPUs shared between jobs.
 

@@ -22,6 +22,7 @@ import threading
 from collections import deque
 from typing import Callable, Iterable
 
+from ..analysis import guarded_by, lock_free
 from ..core.events import QUIET_INTEREST as _QUIET
 from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.monitoring import TaskMonitor
@@ -30,6 +31,7 @@ from .task import Task
 __all__ = ["Scheduler"]
 
 
+@guarded_by("_ready", "_pending", "_ready_count")
 class Scheduler:
     def __new__(cls, monitor: TaskMonitor | None = None,
                 bus: EventBus | None = None,
@@ -106,7 +108,7 @@ class Scheduler:
                     n += 1
         return n
 
-    def _submit_core(self, task: Task) -> bool:
+    def _submit_core(self, task: Task) -> bool:  # analysis: caller-locks
         """Dependency wiring + ready-queue insert (caller holds the lock
         in threadsafe mode; the sequential scheduler calls it bare)."""
         self._pending += 1
@@ -158,6 +160,7 @@ class Scheduler:
                           worker_id=worker_id, elapsed=elapsed)
         return newly_ready
 
+    # analysis: caller-locks
     def _complete_core(self, task: Task, elapsed: float,
                        worker_id: int | None) -> list[Task]:
         task.done = True
@@ -200,6 +203,7 @@ class Scheduler:
             return self._pending == 0
 
 
+@lock_free
 class _SeqScheduler(Scheduler):
     """Single-threaded fast path: identical logic, zero lock round-trips.
 
@@ -208,12 +212,37 @@ class _SeqScheduler(Scheduler):
     accessors read the counters as plain attributes — callers like
     ``SimCluster._dispatch`` stop paying a lock acquire/release per
     ready-count peek.
+
+    Lock-freedom is a contract, not a convenience: exactly one thread
+    may ever drive an instance.  In debug builds (``python`` without
+    ``-O``) the first mutating call binds the owning thread and any call
+    from a different thread raises, so misuse fails loudly instead of
+    corrupting counters.
     """
 
+    def __init__(self, *args: object, **kwargs: object) -> None:
+        super().__init__(*args, **kwargs)  # type: ignore[arg-type]
+        self._owner_ident: int | None = None
+
+    def _assert_owner(self) -> None:
+        ident = threading.get_ident()
+        owner = self._owner_ident
+        if owner is None:
+            self._owner_ident = ident
+        elif owner != ident:
+            raise RuntimeError(
+                "Scheduler(threadsafe=False) is single-threaded by "
+                f"contract: owned by thread {owner}, called from "
+                f"{ident}. Use threadsafe=True for multi-thread access.")
+
     def submit(self, task: Task) -> bool:
+        if __debug__:
+            self._assert_owner()
         return self._submit_core(task)
 
     def submit_all(self, tasks: Iterable[Task]) -> int:
+        if __debug__:
+            self._assert_owner()
         n = 0
         submit = self._submit_core
         for t in tasks:
@@ -222,6 +251,8 @@ class _SeqScheduler(Scheduler):
         return n
 
     def poll(self, worker_id: int | None = None) -> Task | None:
+        if __debug__:
+            self._assert_owner()
         if not self._ready:
             return None
         task = self._ready.popleft()
@@ -235,6 +266,8 @@ class _SeqScheduler(Scheduler):
 
     def complete(self, task: Task, elapsed: float,
                  worker_id: int | None = None) -> list[Task]:
+        if __debug__:
+            self._assert_owner()
         newly_ready = self._complete_core(task, elapsed, worker_id)
         if self.bus.interest != _QUIET:
             self._publish(EventKind.TASK_COMPLETED, task,

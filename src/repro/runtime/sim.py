@@ -404,7 +404,7 @@ class SimCluster:
         if job.scheduler.ready_count == 0:
             uniform = job.policy.poll_uniform
             mgr = job.manager
-            if not job.sharing and not mgr._park_rank:
+            if not job.sharing and not mgr.park_ordered:
                 # Homogeneous non-sharing trim: park order is dict order
                 # and decisions can only SPIN (value mutation of the
                 # visited key — iteration-safe) or IDLE, so the spinner
@@ -415,7 +415,7 @@ class SimCluster:
                 waking = job.waking
                 spin = WorkerState.SPIN
                 poll_empty = mgr.poll_empty
-                for w, s in mgr._states.items():
+                for w, s in mgr.states_items_unlocked():
                     if s is not spin or w in waking:
                         continue
                     decision = poll_empty(w)

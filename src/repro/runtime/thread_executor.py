@@ -34,6 +34,7 @@ import threading
 import time
 from typing import Iterable
 
+from ..analysis import guarded_by
 from ..core.energy import PowerModel
 from ..core.events import EventBus
 from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
@@ -51,6 +52,7 @@ __all__ = ["ThreadExecutor", "ExecutorReport"]
 ExecutorReport = GovernorReport
 
 
+@guarded_by("_submitted_total", lock="_submit_lock")
 class ThreadExecutor:
     def __init__(self, n_workers: int | None = None, policy: str = "busy",
                  spec: GovernorSpec | None = None,

@@ -15,11 +15,13 @@ import threading
 from pathlib import Path
 from typing import Iterable
 
+from ..analysis import guarded_by
 from ..core.events import EventBus, EventKind, RuntimeEvent
 
 __all__ = ["TraceRecorder", "decision_sequence", "prediction_sequence"]
 
 
+@guarded_by("events", "_buses")
 class TraceRecorder:
     """Records :class:`RuntimeEvent` streams from one or more buses."""
 
@@ -36,17 +38,25 @@ class TraceRecorder:
 
     def attach(self, bus: EventBus) -> "TraceRecorder":
         """Subscribe to ``bus`` (idempotent per bus — double-attaching
-        must not double-record every event)."""
-        if any(b is bus for b in self._buses):
-            return self
-        bus.subscribe(self._record, kinds=self._kinds)
-        self._buses.append(bus)
+        must not double-record every event).
+
+        The membership check and the append happen under the recorder
+        lock: two threads racing attach() on the same bus used to both
+        pass the unlocked check and double-subscribe.  Holding it across
+        ``bus.subscribe`` is fine — TraceRecorder precedes EventBus in
+        the declared LOCK_ORDER."""
+        with self._lock:
+            if any(b is bus for b in self._buses):
+                return self
+            bus.subscribe(self._record, kinds=self._kinds)
+            self._buses.append(bus)
         return self
 
     def detach(self) -> None:
-        for bus in self._buses:
+        with self._lock:
+            buses, self._buses = self._buses, []
+        for bus in buses:
             bus.unsubscribe(self._record)
-        self._buses.clear()
 
     def _record(self, ev: RuntimeEvent) -> None:
         with self._lock:

@@ -1,5 +1,37 @@
 import os
 
+import pytest
+
 # Tests run on the single real CPU device — the 512-device dry-run flag
 # must NOT leak here (only repro.launch.dryrun sets it, in-process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_order_witness():
+    """Run the whole suite under the runtime lock-order witness.
+
+    Every ``@guarded_by`` object constructed during the session gets an
+    instrumented lock; at teardown the orders actually observed across
+    all threaded tests are cross-checked against the declared
+    ``LOCK_ORDER`` — an inversion anywhere fails the session (the
+    teardown assertion reliably propagates to a nonzero pytest exit).
+
+    Disable with ``REPRO_LOCK_WITNESS=0`` (e.g. for profiling runs);
+    measurement-only tests opt out locally via ``witness_paused()``.
+    """
+    if os.environ.get("REPRO_LOCK_WITNESS", "1") == "0":
+        yield None
+        return
+    from repro.analysis import install_witness, uninstall_witness
+
+    witness = install_witness(strict=False)
+    yield witness
+    uninstall_witness()
+    problems = witness.check_declared()
+    assert not witness.violations, (
+        "lock-order inversions observed during the test suite:\n"
+        + "\n".join(witness.violations))
+    assert not problems, (
+        "observed lock nestings contradict the declared LOCK_ORDER:\n"
+        + "\n".join(problems))

@@ -1,0 +1,40 @@
+"""Analyzer fixture: seeded lock-order inversion (the PR 4 deadlock
+shape).  Never imported — parsed by ``repro.analysis`` in tests."""
+
+import threading
+
+from repro.analysis import guarded_by
+
+LOCK_ORDER = ("Outer", "Inner")
+
+
+@guarded_by("items")
+class Outer:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.items: list[int] = []
+
+    def add(self, x: int) -> None:
+        with self._lock:
+            self.items.append(x)
+
+
+@guarded_by("count")
+class Inner:
+    def __init__(self, outer: Outer) -> None:
+        self._lock = threading.Lock()
+        self.outer = outer
+        self.count = 0
+
+    def poke(self) -> None:
+        # Holding Inner (rank 1) while calling into Outer.add, which
+        # acquires Outer (rank 0): declared-order inversion.
+        with self._lock:
+            self.count += 1
+            self.outer.add(self.count)
+
+    def nested(self) -> None:
+        # Same inversion, lexically nested.
+        with self._lock:
+            with self.outer._lock:
+                self.outer.items.clear()

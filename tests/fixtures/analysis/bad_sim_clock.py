@@ -1,0 +1,22 @@
+"""Analyzer fixture: determinism hazards in a "sim" module (the stem
+puts it in the determinism lint's scope).  Never imported — parsed by
+``repro.analysis`` in tests."""
+
+import random
+import time
+
+
+def jitter() -> float:
+    # wall clock + global PRNG: two ways to make a replay diverge
+    return time.time() + random.random()
+
+
+def order(xs: list[int]) -> list[int]:
+    return list(set(xs))  # hash-order leak
+
+
+def walk(xs: set[int]) -> int:
+    total = 0
+    for x in xs | {0}:  # iterating set algebra: hash-order leak
+        total += x
+    return total

@@ -1,0 +1,41 @@
+"""Analyzer fixture: lock owner with no declared discipline, plus a
+dead lock and a threading primitive behind a @lock_free class.  Never
+imported — parsed by ``repro.analysis`` in tests."""
+
+import threading
+
+from repro.analysis import guarded_by, lock_free
+
+LOCK_ORDER = ("Declared",)
+
+
+class Quiet:
+    """Owns a lock, declares nothing: undeclared-lock."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def bump(self) -> None:
+        with self._lock:
+            self.n += 1
+
+
+@guarded_by("x")
+class Declared:
+    """Declares a lock it never acquires: unused-lock."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.x = 0
+
+
+@lock_free
+class Fast:
+    """@lock_free but builds a primitive in a helper: lock-free."""
+
+    def work(self) -> None:
+        self._setup()
+
+    def _setup(self) -> None:
+        self._gate = threading.Event()

@@ -1,0 +1,28 @@
+"""Analyzer fixture: guarded field mutated outside its declared lock.
+Never imported — parsed by ``repro.analysis`` in tests."""
+
+import threading
+
+from repro.analysis import guarded_by
+
+LOCK_ORDER = ("Counter",)
+
+
+@guarded_by("total")
+class Counter:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def add(self, n: int) -> None:
+        with self._lock:
+            self.total += n
+
+    def reset(self) -> None:
+        self.total = 0  # race: no lock held
+
+    def drain(self) -> int:
+        with self._lock:
+            n = self.total
+        self.total = 0  # race: lock released before the write
+        return n

@@ -1,0 +1,280 @@
+"""Concurrency & determinism analyzer: CLI exit pins, rule coverage,
+suppression enforcement, runtime witness, and the _SeqScheduler
+owning-thread contract."""
+
+import json
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (LOCK_ORDER, install_witness, lock_free,
+                            registered_classes, witness_paused)
+from repro.analysis import annotations as _annotations
+from repro.analysis.__main__ import determinism_scope, main
+from repro.core.events import EventBus
+from repro.core.monitoring import TaskMonitor
+from repro.runtime.scheduler import Scheduler
+from repro.runtime.task import Task
+from repro.trace.recorder import TraceRecorder
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+REPRO_PKG = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# CLI exit-status pins (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+class TestCLI:
+    def test_repo_is_clean(self, capsys):
+        """Self-hosting: the analyzer exits 0 on the whole package."""
+        assert main([]) == 0
+        assert "clean: 0 findings" in capsys.readouterr().out
+
+    def test_lock_order_inversion_fixture_fails(self, capsys):
+        assert main([str(FIXTURES / "bad_lock_order.py")]) == 1
+        out = capsys.readouterr().out
+        assert "[lock-order]" in out
+        # both shapes: one-hop call into a locking method AND lexical
+        # with-nesting
+        assert out.count("[lock-order]") == 2
+
+    def test_unguarded_mutation_fixture_fails(self, capsys):
+        assert main([str(FIXTURES / "bad_unguarded.py")]) == 1
+        out = capsys.readouterr().out
+        assert out.count("[unguarded-field]") == 2
+
+    def test_wall_clock_in_sim_module_fixture_fails(self, capsys):
+        assert main([str(FIXTURES / "bad_sim_clock.py")]) == 1
+        out = capsys.readouterr().out
+        assert "[wall-clock]" in out
+        assert "[unseeded-random]" in out
+        assert "[set-iteration]" in out
+
+    def test_undeclared_unused_and_lock_free_rules(self, capsys):
+        assert main([str(FIXTURES / "bad_undeclared.py")]) == 1
+        out = capsys.readouterr().out
+        assert "[undeclared-lock]" in out
+        assert "[unused-lock]" in out
+        assert "[lock-free]" in out
+
+    def test_json_output(self, capsys):
+        assert main([str(FIXTURES / "bad_unguarded.py"), "--json"]) == 1
+        payload = json.loads(capsys.readouterr().out)
+        assert payload["files_analyzed"] == 1
+        rules = {f["rule"] for f in payload["findings"]}
+        assert rules == {"unguarded-field"}
+        f = payload["findings"][0]
+        assert set(f) == {"rule", "path", "line", "message"}
+
+    def test_directory_target_recurses(self, capsys):
+        assert main([str(FIXTURES)]) == 1
+        out = capsys.readouterr().out
+        assert "4 file(s) analyzed" in out
+
+
+class TestDeterminismScope:
+    def test_runtime_in_trace_in_executor_out(self):
+        assert determinism_scope(Path("src/repro/runtime/sim.py"))
+        assert determinism_scope(Path("src/repro/trace/replay.py"))
+        assert determinism_scope(Path("src/repro/workloads/arrivals.py"))
+        assert not determinism_scope(
+            Path("src/repro/runtime/thread_executor.py"))
+        assert not determinism_scope(Path("src/repro/core/governor.py"))
+
+    def test_sim_stem_matches_anywhere(self, tmp_path):
+        assert determinism_scope(tmp_path / "my_simulator.py")
+        assert determinism_scope(tmp_path / "replay_check.py")
+        assert not determinism_scope(tmp_path / "model.py")
+
+
+# ---------------------------------------------------------------------------
+# suppression convention
+# ---------------------------------------------------------------------------
+
+
+class TestSuppressions:
+    def test_justified_suppression_silences(self, tmp_path, capsys):
+        f = tmp_path / "quiet_sim.py"
+        f.write_text(
+            "import time\n"
+            "def now():\n"
+            "    return time.time()"
+            "  # analysis: ignore[wall-clock] -- live frontend epoch\n")
+        assert main([str(f)]) == 0
+
+    def test_unjustified_suppression_is_a_finding(self, tmp_path, capsys):
+        f = tmp_path / "quiet_sim.py"
+        f.write_text(
+            "import time\n"
+            "def now():\n"
+            "    return time.time()  # analysis: ignore[wall-clock]\n")
+        assert main([str(f)]) == 1
+        out = capsys.readouterr().out
+        assert "[bad-suppression]" in out
+
+    def test_suppression_is_rule_specific(self, tmp_path, capsys):
+        f = tmp_path / "quiet_sim.py"
+        f.write_text(
+            "import time\n"
+            "def now():\n"
+            "    return time.time()"
+            "  # analysis: ignore[set-iteration] -- wrong rule\n")
+        assert main([str(f)]) == 1
+        assert "[wall-clock]" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# annotation conventions
+# ---------------------------------------------------------------------------
+
+
+class TestAnnotations:
+    def test_all_eight_lock_owners_registered(self):
+        reg = registered_classes()
+        for name in LOCK_ORDER:
+            assert name in reg, f"{name} lost its annotation"
+        assert "_SeqScheduler" in reg
+        assert "CPUPredictor" in reg
+
+    def test_guarded_by_requires_lock_order_entry(self):
+        from repro.analysis import guarded_by
+
+        with pytest.raises(ValueError, match="LOCK_ORDER"):
+            @guarded_by("_x")
+            class NotRanked:  # noqa: F811
+                pass
+
+    def test_declared_metadata(self):
+        assert Scheduler.__lock_attr__ == "_lock"
+        assert "_ready" in Scheduler.__guarded_fields__
+        assert (Scheduler.__lock_rank__
+                < TaskMonitor.__lock_rank__
+                < TraceRecorder.__lock_rank__
+                < EventBus.__lock_rank__)
+
+
+# ---------------------------------------------------------------------------
+# runtime witness
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def fresh_witness():
+    """A private witness for the duration of one test; the suite-wide
+    session witness is restored afterwards so deliberately-seeded
+    violations never leak into the session teardown check."""
+    saved = _annotations._witness
+    w = install_witness(strict=False)
+    yield w
+    _annotations._set_witness(saved)
+
+
+class TestWitness:
+    def test_records_declared_order_nesting(self, fresh_witness):
+        mon = TaskMonitor()
+        s = Scheduler(monitor=mon)
+        t = Task(cost=1.0, type_name="a")
+        s.submit(t)
+        s.complete(s.poll(0), 0.5, 0)
+        assert ("Scheduler", "TaskMonitor") in fresh_witness.observed
+        assert fresh_witness.violations == []
+        assert fresh_witness.check_declared() == []
+
+    def test_flags_inverted_acquisition(self, fresh_witness):
+        rec = TraceRecorder()   # rank after Scheduler
+        s = Scheduler()
+        with rec._lock:
+            with s._lock:
+                pass
+        assert len(fresh_witness.violations) == 1
+        assert "inversion" in fresh_witness.violations[0]
+        problems = fresh_witness.check_declared()
+        assert problems and "inverts declared LOCK_ORDER" in problems[0]
+
+    def test_strict_mode_raises_at_the_inversion(self):
+        saved = _annotations._witness
+        try:
+            install_witness(strict=True)
+            rec = TraceRecorder()
+            s = Scheduler()
+            with pytest.raises(RuntimeError, match="inversion"):
+                with rec._lock:
+                    with s._lock:
+                        pass
+        finally:
+            _annotations._set_witness(saved)
+
+    def test_same_lock_reacquisition_flagged(self, fresh_witness):
+        b1, b2 = EventBus(), EventBus()
+        with b1._lock:
+            with b2._lock:  # same rank: ambiguous order between peers
+                pass
+        assert fresh_witness.violations
+
+    def test_witness_paused_builds_plain_locks(self, fresh_witness):
+        with witness_paused():
+            s = Scheduler()
+        assert type(s._lock) is type(threading.Lock())
+        s2 = Scheduler()  # instrumentation resumes after the pause
+        assert type(s2._lock) is not type(threading.Lock())
+
+    def test_multithreaded_use_stays_clean(self, fresh_witness):
+        s = Scheduler(monitor=TaskMonitor())
+        tasks = [Task(cost=1.0, type_name="t") for _ in range(200)]
+        s.submit_all(tasks)
+
+        def drain():
+            while True:
+                task = s.poll(0)
+                if task is None:
+                    return
+                s.complete(task, 0.1, 0)
+
+        threads = [threading.Thread(target=drain) for _ in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert s.pending == 0
+        assert fresh_witness.violations == []
+        assert fresh_witness.check_declared() == []
+
+
+# ---------------------------------------------------------------------------
+# _SeqScheduler owning-thread contract (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestSeqSchedulerOwnership:
+    def test_single_thread_use_is_fine(self):
+        s = Scheduler(threadsafe=False)
+        t = Task(cost=1.0, type_name="a")
+        assert s.submit(t)
+        assert s.poll(0) is t
+        s.complete(t, 0.1, 0)
+        assert s.drained()
+
+    def test_second_thread_raises(self):
+        s = Scheduler(threadsafe=False)
+        s.submit(Task(cost=1.0, type_name="a"))  # binds the owner
+        caught = []
+
+        def misuse():
+            try:
+                s.poll(0)
+            except RuntimeError as e:
+                caught.append(e)
+
+        th = threading.Thread(target=misuse)
+        th.start()
+        th.join()
+        assert len(caught) == 1
+        assert "single-threaded by contract" in str(caught[0])
+
+    def test_lock_free_annotation_present(self):
+        s = Scheduler(threadsafe=False)
+        assert type(s).__lock_free__ is True
+        assert lock_free is not None  # re-exported for annotating

@@ -172,3 +172,82 @@ class TestMonitorSubscriber:
         assert seen[0].data["deps"] == []
         assert seen[1].data["deps"] == [a.task_id]
         assert seen[1].data["release_time"] == 1.5
+
+
+class TestSubscribeChurnProperty:
+    """Property: under any interleaving of subscribe/unsubscribe (with
+    arbitrary kind filters, duplicate subscribes, and unsubscribes of
+    never-registered handlers), the cached ``interest`` union and the
+    ``interested()`` pre-check stay consistent with the live subscriber
+    list — the copy-on-write cache can never go stale."""
+
+    KINDS = list(EventKind)
+
+    @staticmethod
+    def _expected_interest(subs):
+        kinds = set()
+        for _, ks in subs:
+            if ks is None:
+                return None
+            kinds |= ks
+        return frozenset(kinds)
+
+    def _assert_consistent(self, bus):
+        assert bus.interest == self._expected_interest(bus._subs)
+        for kind in self.KINDS:
+            delivered = any(ks is None or kind in ks
+                            for _, ks in bus._subs)
+            assert bus.interested(kind) == delivered
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_churn_keeps_interest_cache_consistent(self, seed):
+        import random as _random
+
+        rng = _random.Random(seed)
+        bus = EventBus()
+        handlers = [(lambda _e, i=i: None) for i in range(6)]
+        for step in range(120):
+            h = rng.choice(handlers)
+            action = rng.random()
+            if action < 0.55:
+                ks = (None if rng.random() < 0.3 else
+                      rng.sample(self.KINDS, rng.randint(0, 4)))
+                bus.subscribe(h, kinds=ks)
+            else:
+                bus.unsubscribe(h)
+            self._assert_consistent(bus)
+            # no duplicate registrations, ever
+            regs = [hh for hh, _ in bus._subs]
+            assert len(regs) == len(set(map(id, regs)))
+        # full teardown returns the bus to the quiet state
+        for h in handlers:
+            bus.unsubscribe(h)
+        from repro.core.events import QUIET_INTEREST
+        assert bus.interest == QUIET_INTEREST
+        assert bus.n_subscribers == 0
+
+    def test_counts_delivered_events_exactly_once_through_churn(self):
+        import random as _random
+
+        rng = _random.Random(1234)
+        bus = EventBus()
+        counts = [0, 0, 0]
+        handlers = [lambda e, i=0: counts.__setitem__(0, counts[0] + 1),
+                    lambda e, i=1: counts.__setitem__(1, counts[1] + 1),
+                    lambda e, i=2: counts.__setitem__(2, counts[2] + 1)]
+        expected = [0, 0, 0]
+        live = [False, False, False]
+        for _ in range(300):
+            i = rng.randrange(3)
+            if rng.random() < 0.5:
+                bus.subscribe(handlers[i])
+                live[i] = True
+            else:
+                bus.unsubscribe(handlers[i])
+                live[i] = False
+            bus.publish(ev(EventKind.TASK_READY, task_id=1,
+                           type_name="t", cost=1.0))
+            for j in range(3):
+                if live[j]:
+                    expected[j] += 1
+        assert counts == expected
