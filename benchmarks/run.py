@@ -26,7 +26,7 @@ from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
             "roofline", "open_workloads", "heterogeneous", "multiapp",
-            "simperf"]
+            "simperf", "threadperf"]
 
 CAPTIONS = {
     "accuracy": "(paper Table 2)",
@@ -37,6 +37,7 @@ CAPTIONS = {
     "heterogeneous": "(beyond-paper: asymmetric cores + DVFS)",
     "multiapp": "(beyond-paper: N-app co-scheduling arbiter)",
     "simperf": "(simulator event-loop throughput)",
+    "threadperf": "(real-thread executor throughput)",
 }
 
 

@@ -58,6 +58,11 @@ __all__ = [
 #: * ``Scheduler`` holds its lock while driving the ``TaskMonitor``
 #:   (``completion_batch``) and while publishing READY events (which
 #:   reach a ``TraceRecorder``), so it precedes both.
+#: * ``ShardedScheduler`` (the real-thread fast lane) holds its
+#:   dependency-bookkeeping lock only while publishing submit-side
+#:   events (→ recorder); its monitor flushes run with no lock held,
+#:   but ranking it exactly where ``Scheduler`` sits keeps the two
+#:   interchangeable behind an executor.
 #: * ``WorkerManager`` publishes WORKER_STATE transitions (→ recorder)
 #:   with its lock held.
 #: * ``TraceRecorder.attach`` subscribes to a bus, so the recorder lock
@@ -67,6 +72,7 @@ LOCK_ORDER: tuple[str, ...] = (
     "ThreadExecutor",
     "ResourceBroker",
     "Scheduler",
+    "ShardedScheduler",
     "WorkerManager",
     "TaskMonitor",
     "TraceRecorder",

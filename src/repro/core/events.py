@@ -73,12 +73,22 @@ class RuntimeEvent:
     #: single-app frontends — the field round-trips through JSON only
     #: when set, so existing traces stay byte-identical.
     app: str | None = None
+    #: per-stream monotonic sequence stamp for multi-threaded producers
+    #: (one stream per publishing worker, plus one for the submit side).
+    #: Appends from N worker threads interleave in recorder-lock order,
+    #: not program order; the stamp lets
+    #: :meth:`~repro.trace.TraceRecorder.merged_events` reconstruct the
+    #: canonical per-stream order at flush time.  None on
+    #: single-threaded frontends (the simulator) — like ``app``, the
+    #: field round-trips through JSON only when set, so existing traces
+    #: stay byte-identical.
+    seq: int | None = None
     data: Mapping[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict[str, Any]:
         d: dict[str, Any] = {"kind": self.kind.value, "time": self.time}
         for k in ("task_id", "type_name", "cost", "worker_id", "elapsed",
-                  "app"):
+                  "app", "seq"):
             v = getattr(self, k)
             if v is not None:
                 d[k] = v

@@ -98,6 +98,21 @@ class WorkerManager:
         # Transition counters (observability / paper overhead discussion).
         self.idles = 0
         self.resumes = 0
+        # Optional per-worker wake callback (see set_waker) — set once
+        # before the workers start, then only read.
+        self._waker: Callable[[int], None] | None = None
+
+    def set_waker(self, waker: Callable[[int], None] | None) -> None:
+        """Register a per-worker wake callback.
+
+        When set, :meth:`notify_added` invokes ``waker(worker_id)`` for
+        each worker it transitions IDLE → SPIN, *after* releasing the
+        manager lock — targeted wakes (one event set per resumed worker)
+        instead of the executor broadcasting ``notify_all`` to every
+        parked thread.  The callback runs on the notifying thread and
+        must not call back into the manager.
+        """
+        self._waker = waker
 
     # -- introspection -------------------------------------------------------
 
@@ -327,9 +342,12 @@ class WorkerManager:
         """Tasks were added — Alg. 2 lines 11–19.
 
         Returns the worker ids transitioned IDLE → SPIN; the executor must
-        actually wake them (condition variable / sim event).  On
-        heterogeneous machines the wake order follows the park order in
-        reverse (fastest-to-park woken last).
+        actually wake them (condition variable / sim event), unless a
+        :meth:`set_waker` callback is registered — then each woken id is
+        delivered to it here, after the lock is released, and the caller
+        may ignore the return value.  On heterogeneous machines the wake
+        order follows the park order in reverse (fastest-to-park woken
+        last).
         """
         with self._lock:
             n_idle = self._n_idle
@@ -351,7 +369,15 @@ class WorkerManager:
                 self._set(w, WorkerState.SPIN)
                 self._spin_counts[w] = 0
                 self.resumes += 1
-            return woken
+        # Outside the lock: by now every woken worker's transition is
+        # visible, so a worker whose wake event fires re-checks its
+        # state and finds SPIN — no missed wakeup, no lock held while
+        # signalling.
+        waker = self._waker
+        if waker is not None:
+            for w in woken:
+                waker(w)
+        return woken
 
     def reevaluate_spinners(self) -> list[int]:
         """After a prediction tick lowered Δ, ask the policy about every

@@ -39,7 +39,14 @@ __all__ = [
     "TaskMonitor",
     "AccuracyReport",
     "DEFAULT_MIN_SAMPLES",
+    "OP_EXECUTE",
+    "OP_COMPLETE",
 ]
+
+#: op tags for the buffered-op batches :meth:`TaskMonitor.flush_ops`
+#: consumes (built by per-worker producers, e.g. the sharded scheduler)
+OP_EXECUTE = 0
+OP_COMPLETE = 1
 
 #: The one repo-wide default for "how many completed samples before a
 #: type's unitary cost α_j is trusted" (Alg. 1's reliability threshold).
@@ -305,14 +312,18 @@ class TaskMonitor:
     def on_task_execute(self, task_id: int, type_name: str, cost: float) -> None:
         """Task moved ready → executing."""
         with self._lock:
-            self.version += 1
-            m = self._types.get(type_name)
-            if m is None:
-                m = self._metrics(type_name)
-            m.ready_cost -= cost
-            m.ready_instances -= 1
-            m.executing_cost += cost
-            m.executing_instances += 1
+            self._execute_locked(task_id, type_name, cost)
+
+    def _execute_locked(self, task_id: int, type_name: str,
+                        cost: float) -> None:
+        self.version += 1
+        m = self._types.get(type_name)
+        if m is None:
+            m = self._metrics(type_name)
+        m.ready_cost -= cost
+        m.ready_instances -= 1
+        m.executing_cost += cost
+        m.executing_instances += 1
 
     def on_task_completed(self, task_id: int, type_name: str, cost: float,
                           elapsed: float,
@@ -387,6 +398,58 @@ class TaskMonitor:
                 self._ready_locked(t.task_id, t.type_name, t.cost)
             self._completed_locked(task.task_id, task.type_name, task.cost,
                                    elapsed, parent_id, core_type, freq)
+
+    def ready_batch(self, tasks) -> None:
+        """Fold many just-became-ready tasks in under a *single* lock
+        acquisition — the submit-side twin of :meth:`completion_batch`
+        (a whole-graph ``submit_all`` used to pay one monitor lock
+        round-trip per ready root).  Items are duck-typed like
+        :meth:`completion_batch`'s."""
+        with self._lock:
+            for t in tasks:
+                self._ready_locked(t.task_id, t.type_name, t.cost)
+
+    def flush_ops(self, ops) -> None:
+        """Apply one worker's *buffered* lifecycle ops under a single
+        lock acquisition — the multi-threaded generalization of
+        :meth:`completion_batch` that the sharded real-thread scheduler
+        drives: each worker accumulates its execute/complete transitions
+        locally and hands a batch over at flush points, so N spinning
+        workers stop serializing on this lock once per transition.
+
+        ``ops`` entries are tuples tagged by their first element:
+
+        * ``(OP_EXECUTE, task_id, type_name, cost)`` — ready → executing;
+        * ``(OP_COMPLETE, task, elapsed, worker_id, parent_id,
+          newly_ready)`` — one completion plus the tasks it made ready
+          (applied readies-first, exactly like :meth:`completion_batch`).
+
+        Because each worker flushes independently, ops from *different*
+        workers may be applied out of their global wall-clock order (a
+        stolen successor's execute can land before the completion that
+        readied it); the aggregates are sums and EMAs, so they converge
+        to the identical totals, and the transient skew is bounded by
+        the flush batch size.
+        """
+        with self._lock:
+            core_type_of = self._core_type_of
+            freq_of = self._freq_of
+            for op in ops:
+                if op[0] == OP_EXECUTE:
+                    self._execute_locked(op[1], op[2], op[3])
+                else:
+                    _, task, elapsed, worker_id, parent_id, newly = op
+                    for t in newly:
+                        self._ready_locked(t.task_id, t.type_name, t.cost)
+                    core_type = (core_type_of(worker_id)
+                                 if (core_type_of is not None
+                                     and worker_id is not None) else None)
+                    freq = (freq_of(worker_id)
+                            if (freq_of is not None
+                                and worker_id is not None) else 1.0)
+                    self._completed_locked(task.task_id, task.type_name,
+                                           task.cost, elapsed, parent_id,
+                                           core_type, freq)
 
     # -- snapshot for the predictor (Alg. 1 inputs) --------------------------
 

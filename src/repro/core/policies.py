@@ -61,6 +61,11 @@ class Policy(ABC):
     #: (every remaining spinner would get the identical answer, and the
     #: skipped spin-count increments are unread by such policies).
     poll_uniform: bool = False
+    #: True ⇔ :meth:`on_poll_empty` can never return anything but SPIN.
+    #: Real-thread executors may then skip the per-empty-poll manager
+    #: round-trip entirely (the spin counts such a policy never reads are
+    #: the only state the skipped call would have touched).
+    never_idles: bool = False
 
     @abstractmethod
     def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
@@ -95,6 +100,7 @@ class Policy(ABC):
 class BusyPolicy(Policy):
     name = "busy"
     poll_uniform = True
+    never_idles = True
 
     def on_poll_empty(self, worker_id: int, active: int, spin_count: int,
                       ) -> PollDecision:

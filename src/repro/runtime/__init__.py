@@ -5,13 +5,14 @@ reproduces the paper's policy dynamics deterministically on a 1-core host.
 
 from .task import Task, TaskGraph
 from .scheduler import Scheduler
+from .sharded import ShardedScheduler
 from .thread_executor import ThreadExecutor, ExecutorReport
 from .machine import MachineModel, MN4, KNL, HYBRID_PE, DVFS2
 from .sim import SimExecutor, SimJobSpec, SimReport, SimCluster
 from .multiapp import run_multi_app, solo_job_spec
 
 __all__ = [
-    "Task", "TaskGraph", "Scheduler",
+    "Task", "TaskGraph", "Scheduler", "ShardedScheduler",
     "ThreadExecutor", "ExecutorReport",
     "MachineModel", "MN4", "KNL", "HYBRID_PE", "DVFS2",
     "SimExecutor", "SimJobSpec", "SimReport", "SimCluster",

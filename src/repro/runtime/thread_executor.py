@@ -1,17 +1,30 @@
 """Real threaded executor.
 
 Runs task graphs with actual Python threads — the correctness twin of the
-simulator (same governor-assembled Scheduler / WorkerManager / Policy /
-TaskMonitor objects).  Python's GIL means no true parallel speedup on this
-host; the executor exists to validate the concurrency logic (locking,
-idle/resume protocol, monitor event ordering) under real preemption, and
-to measure the *real* bookkeeping overhead of the monitoring
-infrastructure (``benchmarks/bench_overhead.py``).
+simulator (same governor-assembled WorkerManager / Policy / TaskMonitor
+objects).  Python's GIL means no true parallel speedup on this host; the
+executor exists to validate the concurrency logic (locking, idle/resume
+protocol, monitor event ordering) under real preemption, and to measure
+the *real* bookkeeping overhead of the monitoring infrastructure
+(``benchmarks/bench_overhead.py`` / ``bench_threadperf.py``).
 
 The whole resource stack is declared by a
 :class:`~repro.core.governor.GovernorSpec` and assembled by
-:class:`~repro.core.governor.ResourceGovernor`; the executor only owns the
-threads, the condition variable and the scheduler.
+:class:`~repro.core.governor.ResourceGovernor`; the executor owns the
+threads, the per-worker wake events and the scheduler.
+
+Hot-path structure (the PR-5 discipline on real threads):
+
+* ready queues are **sharded per worker** with work stealing
+  (:class:`~repro.runtime.sharded.ShardedScheduler`) — poll and the
+  successor handoff are lock-free;
+* monitor updates are **buffered per worker** and flushed in batches
+  (one ``TaskMonitor`` lock acquisition per ~32 transitions);
+* idle workers park on a **per-worker** ``threading.Event`` and are
+  woken *individually* by the manager's targeted waker — no
+  ``notify_all`` broadcast, no 50 ms wake-poll;
+* the spin loop of a never-idling policy (``busy``) skips the per-poll
+  manager round-trip entirely.
 
 Two execution modes share the worker loop:
 
@@ -21,11 +34,14 @@ Two execution modes share the worker loop:
 * **open** — :meth:`start` spawns workers with no work, :meth:`submit`
   feeds tasks incrementally from any thread, and :meth:`close` waits for
   arrivals to stop and the queue to drain (termination = closed ∧
-  drained).
+  drained).  :meth:`submit` after :meth:`close` raises — the task could
+  never run.
 
 All task lifecycle, worker state and prediction events are published on
 ``self.bus`` — attach a :class:`~repro.trace.TraceRecorder` to record a
-run for deterministic what-if replay in the simulator.
+run for deterministic what-if replay in the simulator (worker-side
+events carry per-stream sequence stamps; the recorder merge-sorts them
+back into canonical order at flush time).
 """
 
 from __future__ import annotations
@@ -43,13 +59,29 @@ from ..core.manager import WorkerState
 from ..core.policies import PollDecision
 from ..core.prediction import PredictionConfig
 from ..workloads.arrivals import ArrivalProcess
-from .scheduler import Scheduler
+from .sharded import ShardedScheduler
 from .task import Task, TaskGraph
 
 __all__ = ["ThreadExecutor", "ExecutorReport"]
 
 #: kept as an alias so downstream code reads one schema everywhere
 ExecutorReport = GovernorReport
+
+#: belt-and-suspenders re-check interval for a parked worker — the
+#: targeted wake event is the real signal (plus the ≥1 ms ticker's
+#: anti-starvation resume path); a timeout firing means both were
+#: missed, and the executor counts it (see ``wake_timeouts``)
+_IDLE_RECHECK_S = 0.5
+
+#: spin pacing: a worker that keeps missing yields the GIL bare for the
+#: first N polls (immediate pickup of fresh work), then naps briefly
+#: between polls.  The lock-free poll made a spin iteration so short
+#: that N spinners hot-yielding starved the threads with actual work of
+#: GIL time (the old globally-locked poll throttled spinners by
+#: *blocking* them); the nap restores that pacing with a bounded,
+#: explicit cost — worst-case extra pickup latency is one nap.
+_SPIN_YIELDS = 10
+_SPIN_NAP_S = 50e-6
 
 
 @guarded_by("_submitted_total", lock="_submit_lock")
@@ -88,14 +120,23 @@ class ThreadExecutor:
         self.policy = self.governor.policy
         self.energy = self.governor.energy
         self.manager = self.governor.manager
-        self.scheduler = Scheduler(self.monitor, bus=self.bus,
-                                   clock=self._clock)
+        self.scheduler = ShardedScheduler(self.n_workers, self.monitor,
+                                          bus=self.bus, clock=self._clock)
         # Alg. 1 uses spec.prediction.rate_s for its workload math, but a
         # real-time ticker thread cannot honor microsecond rates (the
         # simulator's 50 µs default would busy-loop a core); floor the
         # wall-clock tick interval at 1 ms.
         self.prediction_rate_s = max(spec.prediction.rate_s, 1e-3)
-        self._cv = threading.Condition()
+        # Per-worker park/wake events: the manager's targeted waker sets
+        # exactly the resumed worker's event (Event construction is
+        # fine here — the executor's own lock discipline covers only
+        # _submit_lock; Events park, they do not guard state).
+        self._wake = {w: threading.Event() for w in range(self.n_workers)}
+        self.manager.set_waker(self._wake_worker)
+        # Diagnostics: a parked worker that resumed via the 0.5 s
+        # re-check timeout instead of its wake event (or shutdown).
+        # Single-writer per slot (the owning worker).
+        self._wake_timeouts = [0] * self.n_workers
         self._shutdown = False
         # Open-workload mode: while the run is "open", a drained queue
         # does NOT terminate the workers — more submissions may arrive.
@@ -109,53 +150,91 @@ class ThreadExecutor:
     def _clock(self) -> float:
         return time.perf_counter() - self._t0
 
+    def _wake_worker(self, worker_id: int) -> None:
+        self._wake[worker_id].set()
+
+    @property
+    def wake_timeouts(self) -> int:
+        """How many times a parked worker resumed via the re-check
+        timeout rather than a targeted wake — 0 on a healthy run whose
+        idle stretches are shorter than the re-check interval (the
+        missed-wakeup regression signal)."""
+        return sum(self._wake_timeouts)
+
     # -- worker loop -----------------------------------------------------------
 
     def _worker(self, wid: int) -> None:
+        scheduler = self.scheduler
+        governor = self.governor
+        manager = self.manager
+        busy_spin = self.policy.never_idles
+        wake = self._wake[wid]
+        misses = 0
         while True:
-            task = self.scheduler.poll(worker_id=wid)
+            task = scheduler.poll(wid)
             if task is not None:
-                self.governor.on_task_started(wid)
+                misses = 0
+                governor.on_task_started(wid)
                 t0 = time.perf_counter()
                 if task.fn is not None:
                     task.fn()
                 elif task.service_time is not None:
                     time.sleep(task.service_time)
                 elapsed = time.perf_counter() - t0
-                self.governor.on_task_finished(wid)
-                newly = self.scheduler.complete(task, elapsed,
-                                                worker_id=wid)
-                if newly:
+                governor.on_task_finished(wid)
+                newly = scheduler.complete(task, elapsed, worker_id=wid)
+                if newly and not busy_spin:
+                    # Never-idling policies have nobody to wake (no
+                    # worker ever parks), so skip the per-completion
+                    # manager round-trip; successors are already visible
+                    # on this worker's shard for everyone to steal.
                     self._on_work_added()
-                if self._closing and self.scheduler.drained():
+                if self._closing and scheduler.drained():
                     self._finish()
                 continue
+            # Out of work (from this shard's view): the monitor must not
+            # run stale while we spin or park.
+            scheduler.flush_worker(wid)
             if self._shutdown:
                 return
-            decision = self.governor.on_poll_empty(wid)
+            misses += 1
+            if busy_spin:
+                # Never-idling policy: the decision is always SPIN, so
+                # skip the per-poll manager lock round-trip.
+                time.sleep(0 if misses <= _SPIN_YIELDS else _SPIN_NAP_S)
+                continue
+            decision = governor.on_poll_empty(wid)
             if decision is PollDecision.SPIN:
-                time.sleep(0)  # yield the GIL
+                time.sleep(0 if misses <= _SPIN_YIELDS else _SPIN_NAP_S)
                 continue
             if decision is PollDecision.IDLE:
-                with self._cv:
-                    while (self.manager.state(wid) is WorkerState.IDLE
-                           and not self._shutdown):
-                        self._cv.wait(timeout=0.05)
+                # Park on our own event.  Clearing *before* the state
+                # check makes the race benign in both directions: a wake
+                # that lands before the clear has already made the SPIN
+                # transition visible (the waker runs after the manager
+                # lock is released), so the check breaks the loop; one
+                # that lands after the clear trips wait() immediately.
+                wake.clear()
+                while (manager.state_of(wid) is WorkerState.IDLE
+                       and not self._shutdown):
+                    if wake.wait(timeout=_IDLE_RECHECK_S):
+                        wake.clear()
+                    else:
+                        self._wake_timeouts[wid] += 1
                 continue
             raise RuntimeError(
                 "LEND decisions need a broker-aware executor (use the "
                 "simulator for DLB experiments)")
 
     def _on_work_added(self) -> None:
-        woken = self.governor.on_tasks_added(self.scheduler.ready_count)
-        if woken:
-            with self._cv:
-                self._cv.notify_all()
+        # The manager's targeted waker (set_waker) delivers the actual
+        # wakes — one Event.set per resumed worker, not notify_all.
+        self.governor.on_tasks_added(self.scheduler.ready_count)
 
     def _finish(self) -> None:
         self._shutdown = True
-        with self._cv:
-            self._cv.notify_all()  # unpark idle workers so they can exit
+        for ev in self._wake.values():
+            ev.set()   # unpark everyone so they can observe shutdown
 
     def _ticker(self) -> None:
         while not self._shutdown:
@@ -198,7 +277,13 @@ class ThreadExecutor:
     def submit(self, work: Task | TaskGraph | Iterable[Task]) -> int:
         """Incrementally submit a task, a graph, or an iterable of tasks;
         returns how many became ready immediately.  Thread-safe; callable
-        before :meth:`start` (work queues up) or while running."""
+        before :meth:`start` (work queues up) or while running — but not
+        once :meth:`close` has been called (the run is draining; the
+        submission would sit in the queue forever)."""
+        if self._closing:
+            raise RuntimeError(
+                "submit() after close(): the executor is draining and no "
+                "worker will ever run this task")
         if isinstance(work, Task):
             tasks: list[Task] = [work]
         elif isinstance(work, TaskGraph):
@@ -229,6 +314,9 @@ class ThreadExecutor:
         self._ticker_thread.join()
         assert self._t_start is not None
         makespan = time.perf_counter() - self._t_start
+        # Workers flush their buffers on the way out; this backstop
+        # covers buffers a crashed task's thread left behind.
+        self.scheduler.flush_all()
         self.governor.finish(self._clock())
         return self.governor.report(makespan=makespan,
                                     tasks_fallback=self._submitted_total)
@@ -258,8 +346,10 @@ class ThreadExecutor:
             timed = [(t, t.release_time or 0.0) for t in graph.tasks]
             timed.sort(key=lambda p: p[1])   # pre-stamped order is free
         if timed[-1][1] <= 0.0:
-            self._closing = True
+            # Submit before flagging the drain — submit() refuses work
+            # once _closing is set, and no worker is running yet.
             self.submit(graph)
+            self._closing = True
             self.start()
             return self.close()
         # Open mode: this thread plays the arrival timeline in real time.

@@ -70,12 +70,39 @@ class TraceRecorder:
         with self._lock:
             return len(self.events)
 
+    # -- canonical ordering ------------------------------------------------
+
+    def merged_events(self) -> list[RuntimeEvent]:
+        """Events in canonical (replayable) order.
+
+        Single-threaded producers (the simulator) record an already-
+        ordered stream and get it back verbatim — no event carries a
+        ``seq`` stamp, and the list (hence the JSONL bytes) is exactly
+        what was appended.  Multi-threaded producers (the sharded
+        real-thread scheduler) append from N streams in recorder-lock
+        order, which is not program order; their events carry per-stream
+        monotonic ``seq`` stamps, and this method merge-sorts the
+        streams back: stable sort on ``(time, stream, seq)``, where the
+        stream is the publishing worker (submit-side events sort as
+        stream −1).  Unstamped events (worker states, predictions) keep
+        their arrival position among equal-time stamps — replay ignores
+        their order.
+        """
+        with self._lock:
+            events = list(self.events)
+        if all(ev.seq is None for ev in events):
+            return events
+        events.sort(key=lambda ev: (
+            ev.time,
+            -1 if ev.worker_id is None else ev.worker_id,
+            -1 if ev.seq is None else ev.seq))
+        return events
+
     # -- JSONL round trip --------------------------------------------------
 
     def to_jsonl(self, path: str | Path) -> Path:
         path = Path(path)
-        with self._lock:
-            events = list(self.events)
+        events = self.merged_events()
         with path.open("w") as f:
             for ev in events:
                 f.write(json.dumps(ev.to_dict()) + "\n")
@@ -102,8 +129,7 @@ class TraceRecorder:
         prefill/decode ticks — are reconstructed from their elapsed), and
         every PREDICTION tick becomes a Δ counter sample.
         """
-        with self._lock:
-            events = list(self.events)
+        events = self.merged_events()
         if events:
             t0 = min(ev.time for ev in events)
         else:

@@ -40,7 +40,10 @@ class TraceReplayer:
     def __init__(self, events: Iterable[RuntimeEvent] | TraceRecorder
                  | str | Path) -> None:
         if isinstance(events, TraceRecorder):
-            self.events = list(events.events)
+            # Canonical order: threaded recordings interleave N event
+            # streams in lock order; merged_events() restores the
+            # per-stream sequence (a no-op copy for sim recordings).
+            self.events = events.merged_events()
         elif isinstance(events, (str, Path)):
             self.events = list(TraceRecorder.from_jsonl(events).events)
         else:
@@ -96,11 +99,22 @@ class TraceReplayer:
                 # resource *holding* time on every frontend.  A serving
                 # request's published ``elapsed`` is its sojourn
                 # (queueing included), which must not be replayed as
-                # service time; in the simulator the interval equals the
-                # published elapsed exactly, keeping round trips exact.
+                # service time.  When the interval agrees with the
+                # published elapsed to within float rounding, keep the
+                # published value: the simulator computes the COMPLETED
+                # timestamp as start + service, so re-deriving the
+                # service as ``time - start`` can be an ulp off — and
+                # that ulp would break the byte-exact replay-of-replay
+                # round trip.
                 start = exec_at.get(ev.task_id)
-                elapsed[ev.task_id] = (ev.time - start if start is not None
-                                       else ev.elapsed)
+                if start is None:
+                    elapsed[ev.task_id] = ev.elapsed
+                else:
+                    interval = ev.time - start
+                    if abs(interval - ev.elapsed) <= 1e-9 * abs(interval):
+                        elapsed[ev.task_id] = ev.elapsed
+                    else:
+                        elapsed[ev.task_id] = interval
         if not submitted:
             return TaskGraph(), None
         missing = [ev.task_id for ev in submitted

@@ -1,0 +1,288 @@
+"""ThreadExecutor fast lane: sharded queues, batched monitoring,
+per-worker wake targeting, and the threaded-trace → sim round trip.
+
+Structural properties are tested on :class:`ShardedScheduler` directly
+(single-threaded — every interleaving is then deterministic); the
+threaded tests assert end-state invariants (all tasks ran, no wake
+timeout, no lock-order violation) rather than schedules, because a real
+8-worker schedule is not reproducible.
+"""
+
+import itertools
+import json
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import annotations, install_witness
+from repro.core import GovernorSpec
+from repro.core.events import EventBus
+from repro.core.monitoring import TaskMonitor
+from repro.runtime import ShardedScheduler, Task, TaskGraph, ThreadExecutor
+from repro.runtime import task as task_mod
+from repro.trace import TraceRecorder, TraceReplayer
+from repro.workloads import BurstArrivals
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_threadperf.json"
+
+
+def fanout_graph(width=8, depth=6, service=1e-5):
+    """``depth`` waves of ``width`` tasks behind a barrier each — wide
+    enough to spill across shards, deep enough to exercise handoff."""
+    g = TaskGraph()
+    done = []
+    prev_wave = []
+    for d in range(depth):
+        wave = []
+        for w in range(width):
+            t = Task(f"w{w % 3}", cost=1.0 + w % 3,
+                     fn=lambda: done.append(1), service_time=service)
+            for p in prev_wave:
+                t.depends_on(p)
+            g.add(t)
+            wave.append(t)
+        prev_wave = wave
+    return g, done
+
+
+class TestShardedScheduler:
+    def test_global_queue_hands_off_fifo(self):
+        s = ShardedScheduler(2)
+        a, b = Task("a"), Task("b")
+        assert s.submit_all([a, b]) == 2
+        # external submissions land on the global queue; any worker
+        # drains it oldest-first
+        assert s.poll(1) is a
+        assert s.poll(0) is b
+        assert s.poll(0) is None and s.poll(1) is None
+
+    def test_local_lifo_then_fifo_steal(self):
+        s = ShardedScheduler(2)
+        a = Task("a")
+        b = Task("b").depends_on(a)
+        c = Task("c").depends_on(a)
+        s.submit_all([a, b, c])
+        assert s.poll(0) is a
+        assert s.complete(a, 0.0, worker_id=0) == [b, c]
+        # owner pops its own shard LIFO: most recently readied runs
+        # next, cache-warm
+        assert s.poll(0) is c
+        # a thief takes the *oldest* entry from the victim's far end
+        assert s.poll(1) is b
+        assert s.steals == 1
+        s.complete(c, 0.0, worker_id=0)
+        s.complete(b, 0.0, worker_id=1)
+        assert s.drained() and s.pending == 0
+
+    def test_monitor_ops_buffer_until_flush(self):
+        m = TaskMonitor()
+        s = ShardedScheduler(1, monitor=m, flush_batch=1000)
+        tasks = [Task("t") for _ in range(3)]
+        s.submit_all(tasks)
+        for _ in tasks:
+            t = s.poll(0)
+            s.complete(t, 1e-4, worker_id=0)
+        # transitions sit in the worker's buffer — one monitor lock
+        # acquisition happens at flush, not per event
+        assert m.completed_instances() == 0
+        s.flush_worker(0)
+        assert m.completed_instances() == 3
+
+    def test_flush_triggers_at_batch_threshold(self):
+        m = TaskMonitor()
+        s = ShardedScheduler(1, monitor=m, flush_batch=2)
+        s.submit_all([Task("t"), Task("t")])
+        t1 = s.poll(0)              # 1 op buffered (execute)
+        assert m.completed_instances() == 0
+        s.complete(t1, 1e-4, worker_id=0)   # 2nd op hits the threshold
+        assert m.completed_instances() == 1
+
+    def test_flush_all_is_the_drain_backstop(self):
+        m = TaskMonitor()
+        s = ShardedScheduler(4, monitor=m, flush_batch=1000)
+        s.submit_all([Task("t") for _ in range(4)])
+        for w in range(4):
+            s.complete(s.poll(w), 1e-4, worker_id=w)
+        s.flush_all()
+        assert m.completed_instances() == 4
+
+
+class TestExecutorLifecycle:
+    def test_submit_after_close_raises(self):
+        ex = ThreadExecutor(2, policy="busy").start()
+        done = []
+        ex.submit(Task("w", fn=lambda: done.append(1), service_time=1e-6))
+        ex.close()
+        assert done == [1]
+        with pytest.raises(RuntimeError, match="after close"):
+            ex.submit(Task("w", fn=lambda: done.append(2)))
+
+    def test_submit_after_closed_run_raises(self):
+        g, done = fanout_graph(width=4, depth=2)
+        ex = ThreadExecutor(2, policy="idle")
+        ex.run(g)
+        with pytest.raises(RuntimeError, match="after close"):
+            ex.submit(Task("w", fn=lambda: None))
+
+    @pytest.mark.parametrize("policy", ["idle", "hybrid", "prediction"])
+    def test_wake_targeting_no_timeouts(self, policy):
+        """Every idle stretch in this run is far below the 0.5 s parked
+        recheck, so a single missed wakeup would strand a worker for the
+        full timeout; ``wake_timeouts == 0`` is the no-missed-wakeup
+        witness for the targeted (non-``notify_all``) wake path."""
+        g, done = fanout_graph(width=8, depth=6)
+        ex = ThreadExecutor(4, policy=policy, prediction_rate_s=1e-3)
+        ex.run(g)
+        assert len(done) == 48
+        assert ex.wake_timeouts == 0
+
+    def test_wake_targeting_open_mode(self):
+        ex = ThreadExecutor(3, policy="idle").start()
+        done = []
+        for burst in range(5):
+            for _ in range(6):
+                ex.submit(Task("w", cost=1.0, fn=lambda: done.append(1),
+                               service_time=1e-6))
+            time.sleep(2e-3)    # idle lull well under the 0.5 s recheck
+        ex.close()
+        assert len(done) == 30
+        assert ex.wake_timeouts == 0
+
+
+class TestThreadedTraceReplay:
+    @pytest.mark.parametrize("policy", ["busy", "idle", "hybrid",
+                                        "prediction"])
+    def test_threaded_trace_replays_in_sim(self, policy, tmp_path):
+        """A trace recorded on real threads (N interleaved event
+        streams, merged by per-stream seq) must rebuild and replay in
+        the simulator — and the sim replay of that replay must be
+        byte-identical, the same round-trip contract sim-recorded
+        traces have."""
+        g, done = fanout_graph(width=6, depth=4, service=1e-4)
+        n = len(g.tasks)
+        ex = ThreadExecutor(4, policy=policy, prediction_rate_s=1e-3)
+        rec = TraceRecorder(bus=ex.bus)
+        r1 = ex.run(g)
+        assert r1.tasks_completed == n == len(done)
+
+        spec = GovernorSpec(resources=4, policy=policy, monitoring=True)
+        bus2 = EventBus()
+        rec2 = TraceRecorder(bus=bus2)
+        # task ids are a process-global counter; byte identity needs
+        # both rebuilds to mint the same ids (as test_simperf does)
+        task_mod._ids = itertools.count(10_000)
+        r2 = TraceReplayer(rec).replay(spec, bus=bus2)
+        assert r2.tasks_completed == n
+
+        bus3 = EventBus()
+        rec3 = TraceRecorder(bus=bus3)
+        task_mod._ids = itertools.count(10_000)
+        r3 = TraceReplayer(rec2).replay(spec, bus=bus3)
+        assert r3.tasks_completed == n
+        p2 = rec2.to_jsonl(tmp_path / "replay1.jsonl")
+        p3 = rec3.to_jsonl(tmp_path / "replay2.jsonl")
+        assert p2.read_bytes() == p3.read_bytes()
+
+    def test_threaded_jsonl_round_trip(self, tmp_path):
+        """Merged threaded trace → JSONL → replayer: same graph."""
+        g, _ = fanout_graph(width=5, depth=3, service=1e-5)
+        ex = ThreadExecutor(3, policy="busy")
+        rec = TraceRecorder(bus=ex.bus)
+        ex.run(g)
+        path = rec.to_jsonl(tmp_path / "threaded.jsonl")
+        graph, _arrivals = TraceReplayer(path).build()
+        assert len(graph.tasks) == len(g.tasks)
+
+
+@pytest.mark.slow
+class TestOpenModeStress:
+    def test_burst_stress_under_strict_witness(self):
+        """≥8 workers, burst arrivals, prediction policy, with the
+        lock-order witness in strict mode: any inversion raises on the
+        acquiring thread instead of being collected for session end."""
+        saved = annotations._witness
+        witness = install_witness(strict=True)
+        try:
+            ex = ThreadExecutor(8, policy="prediction",
+                                prediction_rate_s=1e-3).start()
+            done = []
+            times = BurstArrivals(burst_size=64, gap=4e-3,
+                                  spacing=0.0).times(512)
+            t0 = time.perf_counter()
+            for rt in times:
+                lag = rt - (time.perf_counter() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+                ex.submit(Task("w", cost=1.0, fn=lambda: done.append(1),
+                               service_time=1e-5))
+            ex.close()
+        finally:
+            annotations._set_witness(saved)
+        assert len(done) == 512
+        assert not witness.violations
+        assert witness.check_declared() == []
+        assert ex.wake_timeouts == 0
+
+
+class TestThroughputPins:
+    """The committed BENCH_threadperf.json is the contract."""
+
+    @pytest.fixture(autouse=True)
+    def _no_witness(self):
+        # Measurement-only tests must not pay the suite-wide lock-order
+        # witness's per-acquisition bookkeeping.
+        from repro.analysis import witness_paused
+        with witness_paused():
+            yield
+
+    @pytest.fixture(scope="class")
+    def bench(self):
+        assert BENCH_PATH.exists(), "BENCH_threadperf.json not committed"
+        rows = json.loads(BENCH_PATH.read_text())["rows"]
+        return {(r["scenario"], r["mode"]): r for r in rows}
+
+    def test_committed_acceptance_speedup(self, bench):
+        """Acceptance pin: ≥1.5× tasks/sec vs the recorded pre-change
+        baseline on the 8-worker closed-graph scenario."""
+        base = bench[("closed/8w/busy", "baseline")]
+        fast = bench[("closed/8w/busy", "fastlane")]
+        assert fast["tasks_per_sec"] >= 1.5 * base["tasks_per_sec"]
+
+    def test_committed_no_scenario_collapsed(self, bench):
+        """No committed scenario may sit below 0.9× its recorded
+        baseline (open/2w is driver-bound, not scheduler-bound, so
+        parity there is expected — collapse is not)."""
+        for (scenario, mode), row in bench.items():
+            if mode != "fastlane":
+                continue
+            base = bench[(scenario, "baseline")]
+            assert row["tasks_per_sec"] > 0.9 * base["tasks_per_sec"], \
+                f"{scenario} collapsed vs recorded baseline"
+
+    @pytest.mark.slow
+    def test_throughput_floor_renormalized(self, bench):
+        """Re-run the gate scenario and compare *normalized* throughput
+        (tasks/sec × calibration seconds) against the committed row.
+        Threaded wall time is far noisier than the simulator's CPU
+        time, so the floor is generous: >50% regression fails."""
+        from benchmarks.bench_threadperf import (calibrate, chain_graph)
+
+        committed = bench[("closed/8w/busy", "fastlane")]
+        calib_now = min(calibrate() for _ in range(3))
+        best = None
+        for _ in range(3):  # best-of-3, like the committed measurement
+            g = chain_graph(32, 200)
+            ex = ThreadExecutor(8, policy="busy")
+            t0 = time.perf_counter()
+            ex.run(g)
+            wall = time.perf_counter() - t0
+            best = wall if best is None or wall < best else best
+        norm_now = (6400 / best) * calib_now
+        norm_committed = (committed["tasks_per_sec"]
+                          * committed["calibration"])
+        assert norm_now >= 0.5 * norm_committed, (
+            f"fast-lane throughput regressed: {6400 / best:.0f} tasks/s "
+            f"(normalized {norm_now:.0f}) vs committed "
+            f"{committed['tasks_per_sec']:.0f} "
+            f"(normalized {norm_committed:.0f})")
