@@ -1,0 +1,149 @@
+"""Multi-node cluster sweep (beyond-paper: placement + locality guard).
+
+Two scenarios over :class:`~repro.runtime.cluster.ClusterModel`:
+
+**placement** — four apps (two heavy coarse MultiSAXPYs, a wavefronted
+Gauss-Seidel, an HPCCG loop) co-scheduled on {MN4, HYBRID-PE} × N ∈
+{1, 2, 3} nodes, comparing static round-robin placement against the
+arbiter's prediction-driven best-fit-decreasing (each app's own
+predictor supplies its demand estimate).  Submission order is chosen so
+round-robin lands both heavy apps on node 0 at N=2 — the co-location
+mistake demand-blind placement cannot see.  Once a light app drains,
+its cores flow to its co-tenant through the broker (local lends, no
+remote penalty), so separating the heavies compounds.
+
+**hetero-guard** — 2 × HYBRID-PE with the saturated SAXPY borrowing
+across nodes, guard-on (``min_borrow_speed`` default: remote E cores
+deliver 0.55/(1+p) < 0.55 of an own core and are refused; remote P
+cores still pay) vs guard-off (borrow anything), swept over the
+fabric's ``remote_penalty``.  On a fast fabric extra slow silicon still
+wins aggregate EDP; past the crossover the guard's refusals win — the
+count of refused losing borrows is reported either way.
+"""
+
+from __future__ import annotations
+
+from repro.core.governor import GovernorSpec
+from repro.runtime import HYBRID_PE, MN4, ClusterModel, SimJobSpec, \
+    run_multi_node
+from repro.workloads import (build_gauss_seidel, build_hpccg,
+                             build_multisaxpy)
+
+from .common import emit
+
+PLACEMENTS = ("round-robin", "predicted")
+
+#: submission order matters: round-robin is order-blind, so the two
+#: heavy SAXPYs (first and third) co-locate on node 0 at N=2
+APP_KW = {
+    "saxpyA": ("saxpy", dict(grain="coarse", generations=12, blocks=120,
+                             block_elems=400_000, seed=0)),
+    "gauss": ("gauss", dict(steps=4, bi=8, bj=8, block_elems=150_000,
+                            seed=1)),
+    "saxpyB": ("saxpy", dict(grain="coarse", generations=12, blocks=120,
+                             block_elems=400_000, seed=2)),
+    "hpccg": ("hpccg", dict(iterations=4, blocks=24,
+                            rows_per_block=16_384, seed=3)),
+}
+SMOKE_KW = {
+    "saxpyA": ("saxpy", dict(grain="coarse", generations=6, blocks=60,
+                             block_elems=400_000, seed=0)),
+    "gauss": ("gauss", dict(steps=3, bi=6, bj=6, block_elems=150_000,
+                            seed=1)),
+    "saxpyB": ("saxpy", dict(grain="coarse", generations=6, blocks=60,
+                             block_elems=400_000, seed=2)),
+    "hpccg": ("hpccg", dict(iterations=3, blocks=16,
+                            rows_per_block=16_384, seed=3)),
+}
+_BUILDERS = {"saxpy": build_multisaxpy, "gauss": build_gauss_seidel,
+             "hpccg": build_hpccg}
+
+#: fabric dilation sweep for the guard scenario: 0.15 is the default
+#: (fast fabric — extra remote silicon still pays), 0.8 is past the
+#: crossover where refusing sub-own-speed borrows wins aggregate EDP
+GUARD_PENALTIES = (0.15, 0.8)
+
+
+def _specs(app_kw: dict, spec_of) -> list[SimJobSpec]:
+    return [SimJobSpec(name=name,
+                       graph=_BUILDERS[kind](**kw),
+                       governor=spec_of(name))
+            for name, (kind, kw) in app_kw.items()]
+
+
+def _placement_rows(app_kw: dict, machines, ns) -> list[dict]:
+    rows: list[dict] = []
+    gov = GovernorSpec(resources=48, policy="dlb-prediction")
+    for machine in machines:
+        for n in ns:
+            for placement in PLACEMENTS:
+                cm = ClusterModel.symmetric(machine, n)
+                rep = run_multi_node(cm, _specs(app_kw, lambda _: gov),
+                                     placement=placement)
+                for name in app_kw:
+                    r = rep.apps[name]
+                    rows.append({
+                        "bench": "cluster", "scenario": "placement",
+                        "machine": machine.name, "n_nodes": n,
+                        "placement": placement, "app": name,
+                        "node": r.node,
+                        "time_s": round(r.makespan, 4),
+                        "edp": round(r.edp, 4),
+                        "transfers": r.transfers,
+                    })
+                    emit(rows[-1])
+                rows.append({
+                    "bench": "cluster", "scenario": "placement",
+                    "machine": machine.name, "n_nodes": n,
+                    "placement": placement, "app": "ALL",
+                    "time_s": round(rep.makespan, 4),
+                    "edp": round(rep.aggregate_edp, 4),
+                    "energy_j": round(rep.aggregate_energy, 4),
+                    "transfers": sum(r.transfers
+                                     for r in rep.apps.values()),
+                    "guard_refusals": sum(
+                        r.sharing.get("guard_refusals", 0)
+                        for r in rep.apps.values()),
+                })
+                emit(rows[-1])
+    return rows
+
+
+def _guard_rows(app_kw: dict) -> list[dict]:
+    """2 × HYBRID-PE: the guard's refused remote-E borrows vs taking
+    every core the broker offers, across the fabric-penalty sweep."""
+    rows: list[dict] = []
+    duo = {k: app_kw[k] for k in ("saxpyA", "hpccg")}
+    for penalty in GUARD_PENALTIES:
+        for guard, msb in (("on", 1.0), ("off", 0.0)):
+            cm = ClusterModel.symmetric(HYBRID_PE, 2,
+                                        remote_penalty=penalty)
+            gov = GovernorSpec(resources=24, policy="dlb-prediction",
+                               min_borrow_speed=msb)
+            rep = run_multi_node(cm, _specs(duo, lambda _: gov),
+                                 placement="predicted")
+            rows.append({
+                "bench": "cluster", "scenario": "hetero-guard",
+                "machine": "HYBRID-PEx2", "remote_penalty": penalty,
+                "guard": guard, "app": "ALL",
+                "time_s": round(rep.makespan, 4),
+                "edp": round(rep.aggregate_edp, 4),
+                "transfers": sum(r.transfers for r in rep.apps.values()),
+                "guard_refusals": sum(r.sharing.get("guard_refusals", 0)
+                                      for r in rep.apps.values()),
+            })
+            emit(rows[-1])
+    return rows
+
+
+def run(smoke: bool = False) -> list[dict]:
+    app_kw = SMOKE_KW if smoke else APP_KW
+    machines = (MN4,) if smoke else (MN4, HYBRID_PE)
+    ns = (2,) if smoke else (1, 2, 3)
+    rows = _placement_rows(app_kw, machines, ns)
+    rows += _guard_rows(app_kw)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -79,9 +79,41 @@ def dryrun_table() -> None:
                       f"| {r['compile_s']:.0f} |")
 
 
+def cluster_table() -> None:
+    """Placement-policy and locality-guard tables from the committed
+    ``BENCH_cluster.json`` (see ``benchmarks/bench_cluster.py``)."""
+    bench = pathlib.Path(__file__).resolve().parents[1] \
+        / "BENCH_cluster.json"
+    if not bench.exists():
+        print("\n(BENCH_cluster.json not found — run "
+              "`python -m benchmarks.run --only cluster` first)")
+        return
+    rows = json.loads(bench.read_text())["rows"]
+    print("\n| machine | nodes | placement | makespan s | aggregate EDP"
+          " | transfers |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        if r["scenario"] != "placement" or r["app"] != "ALL":
+            continue
+        print(f"| {r['machine']} | {r['n_nodes']} | {r['placement']} "
+              f"| {r['time_s']:.4f} | {r['edp']:.4f} "
+              f"| {r['transfers']} |")
+    print("\n| fabric penalty | guard | makespan s | aggregate EDP "
+          "| transfers | refused borrows |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        if r["scenario"] != "hetero-guard":
+            continue
+        print(f"| {r['remote_penalty']} | {r['guard']} "
+              f"| {r['time_s']:.4f} | {r['edp']:.4f} "
+              f"| {r['transfers']} | {r['guard_refusals']} |")
+
+
 if __name__ == "__main__":
     print("## Generated tables (from artifacts/dryrun)")
     print("\n### §Dry-run")
     dryrun_table()
     print("\n### §Roofline (single-pod 16×16, per-device terms)")
     roofline_table()
+    print("\n### §Cluster (multi-node placement + locality guard)")
+    cluster_table()

@@ -26,7 +26,7 @@ from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
             "roofline", "open_workloads", "heterogeneous", "multiapp",
-            "simperf", "threadperf"]
+            "cluster", "simperf", "threadperf"]
 
 CAPTIONS = {
     "accuracy": "(paper Table 2)",
@@ -36,6 +36,7 @@ CAPTIONS = {
     "open_workloads": "(beyond-paper: arrival-driven load)",
     "heterogeneous": "(beyond-paper: asymmetric cores + DVFS)",
     "multiapp": "(beyond-paper: N-app co-scheduling arbiter)",
+    "cluster": "(beyond-paper: multi-node placement + locality guard)",
     "simperf": "(simulator event-loop throughput)",
     "threadperf": "(real-thread executor throughput)",
 }

@@ -27,11 +27,14 @@ cluster-wide fairness metrics of :class:`MultiAppReport`.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Mapping
+from typing import TYPE_CHECKING, Callable, Mapping
 
 from .governor import GovernorReport, ResourceGovernor
 from .sharing import ResourceBroker
 from .topology import CoreTopology
+
+if TYPE_CHECKING:  # runtime import would be circular (runtime -> core)
+    from ..runtime.cluster import ClusterModel
 
 __all__ = [
     "AppPlan",
@@ -69,10 +72,17 @@ class AppShareStats:
     acquired: int = 0   # CPUs granted to this app by acquire()
     returns: int = 0    # borrowed CPUs handed back on a reclaim flag
     reclaims: int = 0   # reclaim rounds this app initiated
+    #: pooled CPUs a short grant could NOT take because the locality
+    #: guard (max_borrow_distance / remote-penalty-adjusted
+    #: min_borrow_speed) refused them — the borrows the guard avoided
+    guard_refusals: int = 0
+    migrations: int = 0  # whole-app node migrations
 
     def as_dict(self) -> dict[str, int]:
         return {"lends": self.lends, "acquired": self.acquired,
-                "returns": self.returns, "reclaims": self.reclaims}
+                "returns": self.returns, "reclaims": self.reclaims,
+                "guard_refusals": self.guard_refusals,
+                "migrations": self.migrations}
 
 
 class ClusterArbiter:
@@ -84,25 +94,74 @@ class ClusterArbiter:
     """
 
     def __init__(self, broker: ResourceBroker,
-                 topology: CoreTopology | None = None) -> None:
+                 topology: CoreTopology | None = None,
+                 cluster: "ClusterModel | None" = None) -> None:
         self.broker = broker
         #: the *machine's* topology (typed brokers only) — apps own
         #: sliced views of it, but the pool can hold any machine type
         self.topology = topology
+        #: the locality hierarchy (multi-node runs): enables the
+        #: distance/remote-penalty borrow guards and near-first grants
+        self.cluster = cluster
         self._governors: dict[str, ResourceGovernor] = {}
         self.stats: dict[str, AppShareStats] = {}
+        #: app -> home node (0 on single-node clusters)
+        self.homes: dict[str, int] = {}
 
     # -- registration --------------------------------------------------------
 
-    def register(self, name: str, governor: ResourceGovernor) -> None:
+    def register(self, name: str, governor: ResourceGovernor,
+                 node: int = 0) -> None:
         self._governors[name] = governor
         self.stats[name] = AppShareStats()
+        self.homes[name] = node
+
+    def note_migration(self, name: str, node: int) -> None:
+        """The frontend migrated ``name`` to ``node``: update the home
+        used by the locality guards and count the verb."""
+        self.homes[name] = node
+        self.stats[name].migrations += 1
 
     def apps(self) -> list[str]:
         return list(self._governors)
 
     def governor(self, name: str) -> ResourceGovernor:
         return self._governors[name]
+
+    # -- placement -----------------------------------------------------------
+
+    @staticmethod
+    def place(demands: Mapping[str, float], capacities: list[float],
+              policy: str = "predicted") -> dict[str, int]:
+        """Whole-app → node placement.
+
+        ``demands`` maps each app to its predicted CPU demand (each
+        app's own predictor's estimate — see
+        :func:`~repro.runtime.multiapp.predicted_demand`);
+        ``capacities`` is per-node core capacity.
+
+        * ``"round-robin"`` — app *i* (submission order) → node
+          ``i % n``, blind to demand;
+        * ``"predicted"`` — best-fit decreasing: heaviest app first onto
+          the node with the most remaining capacity, so one node is not
+          left running two heavy apps while another hosts two light
+          ones.  Ties break toward the lower node id (deterministic).
+        """
+        n = len(capacities)
+        if n == 0:
+            raise ValueError("need at least one node")
+        if policy == "round-robin":
+            return {name: i % n for i, name in enumerate(demands)}
+        if policy != "predicted":
+            raise ValueError(f"unknown placement policy {policy!r}")
+        remaining = list(capacities)
+        out: dict[str, int] = {}
+        order = sorted(demands, key=lambda a: (-demands[a], a))
+        for name in order:
+            node = max(range(n), key=lambda k: (remaining[k], -k))
+            out[name] = node
+            remaining[node] -= demands[name]
+        return out
 
     # -- planning ------------------------------------------------------------
 
@@ -176,6 +235,49 @@ class ClusterArbiter:
                 out[ct.name] = want
         return out or None
 
+    # -- locality guard ------------------------------------------------------
+
+    def _locality_filter(self, name: str) -> tuple[
+            Callable[[int], bool] | None, Callable[[int], float] | None]:
+        """The ``(where, prefer)`` pair for ``name``'s broker acquires
+        on a multi-node cluster — ``(None, None)`` on ≤1 node, keeping
+        single-node pool order bit-for-bit.
+
+        ``where`` refuses a foreign CPU when its node is farther than
+        the spec's ``max_borrow_distance``, or when its *effective*
+        speed for this app — own-node speed divided by the remote
+        penalty — falls below ``min_borrow_speed`` × the app's slowest
+        owned core (the same guard :meth:`_borrowable_types` applies by
+        type, extended with the distance dilation: remote silicon that
+        looks fast on paper can still be a losing borrow once the
+        penalty is charged).  ``prefer`` sorts grants nearest-first.
+        """
+        cm = self.cluster
+        if cm is None or cm.n_nodes <= 1:
+            return None, None
+        home = self.homes.get(name, 0)
+        gov = self._governors[name]
+        max_d = gov.spec.max_borrow_distance
+        own = gov.topology
+        home_m = cm.nodes[home]
+        own_slowest = (min(t.speed for t in own.types) * home_m.core_speed
+                       if own is not None else home_m.core_speed)
+        floor = gov.spec.min_borrow_speed * own_slowest
+
+        def where(cpu: int) -> bool:
+            node = cm.node_of(cpu)
+            if node == home:
+                return True
+            if max_d is not None and cm.distance[home][node] > max_d + 1e-12:
+                return False
+            eff = cm.speed_of(cpu) / cm.penalty(home, node)
+            return eff >= floor - 1e-12
+
+        def prefer(cpu: int) -> float:
+            return cm.distance[home][cm.node_of(cpu)]
+
+        return where, prefer
+
     # -- actuation -----------------------------------------------------------
 
     def execute(self, plan: AppPlan,
@@ -186,6 +288,7 @@ class ClusterArbiter:
         reclaim's immediate returns are handed over but not listed)."""
         name = plan.app
         stats = self.stats[name]
+        where, prefer = self._locality_filter(name)
         got: list[int] = []
         #: the classic paths reclaim *after* a short grant; the hetero
         #: path reclaims mid-flight (fast own silicon before slow
@@ -194,12 +297,14 @@ class ClusterArbiter:
         if plan.eager:
             # LeWI-style: one broker call per CPU (per-thread acquisition).
             for _ in range(plan.acquire):
-                batch = self.broker.acquire(name, 1)
+                batch = self.broker.acquire(name, 1, where=where,
+                                            prefer=prefer)
                 if not batch:
                     break
                 got.extend(batch)
         elif plan.acquire_by_type is None:
-            got = self.broker.acquire(name, plan.acquire)
+            got = self.broker.acquire(name, plan.acquire, where=where,
+                                      prefer=prefer)
         else:
             tail_reclaim = False
             # Heterogeneous path.  1) Own-type deficits first (fastest
@@ -211,7 +316,8 @@ class ClusterArbiter:
                 if self.broker.pool_size(ct) == 0:
                     continue
                 batch = self.broker.acquire(name, min(n, want),
-                                            core_type=ct)
+                                            core_type=ct, where=where,
+                                            prefer=prefer)
                 got.extend(batch)
                 want -= len(batch)
             # 2) Reclaim our own (fast) silicon before borrowing foreign
@@ -236,13 +342,20 @@ class ClusterArbiter:
                         break
                     if self.broker.pool_size(ct) == 0:
                         continue
-                    batch = self.broker.acquire(name, want, core_type=ct)
+                    batch = self.broker.acquire(name, want, core_type=ct,
+                                                where=where, prefer=prefer)
                     got.extend(batch)
                     want -= len(batch)
             # typed acquires each overwrote the fairness counter with
             # their own shortfall; record the plan-level one
             self.broker.register_demand(name, want if want > 0 else 0)
         stats.acquired += len(got)
+        if where is not None and len(got) < plan.acquire:
+            # A short locality-guarded grant: attribute up to the
+            # shortfall to pooled CPUs the guard refused (vs. a
+            # genuinely empty pool) — the borrows the guard avoided.
+            stats.guard_refusals += min(plan.acquire - len(got),
+                                        self.broker.pool_rejected(where))
         for cpu in got:
             hand_cpu(cpu)
         if (tail_reclaim and len(got) < plan.acquire
@@ -257,11 +370,22 @@ class ClusterArbiter:
     def _borrowable_types(self, name: str) -> list[str]:
         """Machine core types ``name`` may borrow, fastest first, under
         its spec's ``min_borrow_speed`` guard (all types when the
-        machine topology is unknown)."""
-        if self.topology is None:
-            return []
+        machine topology is unknown).  On a multi-node cluster with no
+        single machine topology, the candidate set is the union of the
+        node topologies (first occurrence wins per name — mixed-node
+        clusters reuse type names only for identical silicon)."""
         gov = self._governors[name]
-        order = [t for t in self.topology.fastest_first()]
+        if self.topology is not None:
+            order = [t for t in self.topology.fastest_first()]
+        elif self.cluster is not None:
+            seen: dict[str, object] = {}
+            for m in self.cluster.nodes:
+                for t in m.topology().types:
+                    seen.setdefault(t.name, t)
+            order = sorted(seen.values(),
+                           key=lambda t: (-t.speed, t.socket))
+        else:
+            return []
         own = gov.topology
         if own is None:
             return [t.name for t in order]
@@ -334,11 +458,14 @@ class MultiAppReport:
     solo: dict[str, GovernorReport] = field(default_factory=dict)
     slowdown: dict[str, float] = field(default_factory=dict)
     fairness: float = 1.0
+    #: app -> home node for multi-node runs (empty on one box)
+    placement: dict[str, int] = field(default_factory=dict)
 
     @classmethod
     def build(cls, apps: Mapping[str, GovernorReport],
               total_dlb_calls: int,
               solo: Mapping[str, GovernorReport] | None = None,
+              placement: Mapping[str, int] | None = None,
               ) -> "MultiAppReport":
         makespan = max((r.makespan for r in apps.values()), default=0.0)
         energy = sum(r.energy for r in apps.values())
@@ -358,4 +485,5 @@ class MultiAppReport:
             solo=dict(solo) if solo else {},
             slowdown=slowdown,
             fairness=jain_fairness(speedups),
+            placement=dict(placement) if placement else {},
         )

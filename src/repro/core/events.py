@@ -54,6 +54,9 @@ class EventKind(enum.Enum):
     WORKER_STATE = "worker_state"
     #: one Algorithm-1 tick (data: delta)
     PREDICTION = "prediction"
+    #: inter-node network transfer on a cross-node dependency edge
+    #: (multi-node clusters; data: src, dst, seconds)
+    TRANSFER = "transfer"
 
 
 @dataclass(frozen=True, slots=True)
@@ -83,12 +86,18 @@ class RuntimeEvent:
     #: field round-trips through JSON only when set, so existing traces
     #: stay byte-identical.
     seq: int | None = None
+    #: locality stamps for multi-node runs: the node the producing job
+    #: lives on and the socket of ``worker_id`` (when the bus knows the
+    #: topology).  Like ``app``/``seq`` they serialize only when set, so
+    #: single-node traces stay byte-identical.
+    node: int | None = None
+    socket: int | None = None
     data: Mapping[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict[str, Any]:
         d: dict[str, Any] = {"kind": self.kind.value, "time": self.time}
         for k in ("task_id", "type_name", "cost", "worker_id", "elapsed",
-                  "app", "seq"):
+                  "app", "seq", "node", "socket"):
             v = getattr(self, k)
             if v is not None:
                 d[k] = v
@@ -115,12 +124,17 @@ class EventBus:
     ``app`` names the application this bus belongs to: published events
     with no ``app`` of their own are stamped with it, which is what lets
     a recorder attached to several per-app buses produce one splittable
-    multi-app trace.
+    multi-app trace.  ``node`` (the app's home node) and ``socket_of``
+    (worker id → socket) stamp locality the same way on multi-node
+    runs; both default to off so single-node traces are unchanged.
     """
 
-    def __init__(self, app: str | None = None) -> None:
+    def __init__(self, app: str | None = None, node: int | None = None,
+                 socket_of: Callable[[int], int] | None = None) -> None:
         self._lock = threading.Lock()
         self.app = app
+        self.node = node
+        self.socket_of = socket_of
         # Copy-on-write subscriber list: publish() iterates a snapshot
         # without holding the lock.
         self._subs: tuple[tuple[Callable[[RuntimeEvent], None],
@@ -209,6 +223,11 @@ class EventBus:
             return
         if self.app is not None and event.app is None:
             event = replace(event, app=self.app)
+        if self.node is not None and event.node is None:
+            event = replace(event, node=self.node)
+        if (self.socket_of is not None and event.socket is None
+                and event.worker_id is not None):
+            event = replace(event, socket=self.socket_of(event.worker_id))
         for handler, kinds in self._subs:
             if kinds is None or event.kind in kinds:
                 handler(event)

@@ -226,6 +226,13 @@ class GovernorSpec:
     #: is a no-op on homogeneous machines (all speeds equal).  0.0
     #: accepts any core (pure throughput apps).
     min_borrow_speed: float = 1.0
+    #: multi-node clusters: never borrow a core whose node is farther
+    #: than this from the app's home node (cluster distance units).
+    #: None (default) = unlimited — the effective-speed guard (the
+    #: remote penalty folded into ``min_borrow_speed``) still applies.
+    #: Serialized only when set, so pre-cluster spec dicts round-trip
+    #: unchanged.
+    max_borrow_distance: float | None = None
     #: extra kwargs for custom registered policy factories
     policy_params: Mapping[str, Any] = field(default_factory=dict)
 
@@ -244,6 +251,11 @@ class GovernorSpec:
             raise ValueError(
                 f"min_borrow_speed must be >= 0, "
                 f"got {self.min_borrow_speed}")
+        if (self.max_borrow_distance is not None
+                and self.max_borrow_distance < 0.0):
+            raise ValueError(
+                f"max_borrow_distance must be >= 0, "
+                f"got {self.max_borrow_distance}")
         if (self.topology is not None
                 and self.topology.n_cores != self.resources):
             raise ValueError(
@@ -261,6 +273,8 @@ class GovernorSpec:
             d.pop("topology")
         else:
             d["topology"] = self.topology.to_dict()
+        if self.max_borrow_distance is None:
+            d.pop("max_borrow_distance")
         return d
 
     @classmethod
@@ -309,6 +323,14 @@ class GovernorReport:
     #: CPU-flow counters from the co-scheduling arbiter
     #: (lends/acquired/returns/reclaims; {} outside arbitrated runs)
     sharing: dict[str, int] = field(default_factory=dict)
+    #: multi-node cluster runs: home node, cross-node dependency
+    #: transfers charged to this app, and explicit migrations (defaults
+    #: — None/0 — everywhere else, keeping single-node reports
+    #: bit-identical to the pre-cluster schema)
+    node: int | None = None
+    transfers: int = 0
+    transfer_seconds: float = 0.0
+    migrations: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -590,7 +612,10 @@ class ResourceGovernor:
     def report(self, *, name: str = "", makespan: float | None = None,
                tasks_fallback: int = 0, dlb_calls: int = 0,
                monitor_events: int = 0,
-               sharing: Mapping[str, int] | None = None) -> GovernorReport:
+               sharing: Mapping[str, int] | None = None,
+               node: int | None = None, transfers: int = 0,
+               transfer_seconds: float = 0.0,
+               migrations: int = 0) -> GovernorReport:
         """Assemble the unified report (``finish()`` must have run)."""
         energy_meter = self.energy
         if energy_meter is None:
@@ -626,4 +651,8 @@ class ResourceGovernor:
                           if self.predictor is not None
                           and not self._topology_synthesized else {}),
             sharing=dict(sharing) if sharing else {},
+            node=node,
+            transfers=transfers,
+            transfer_seconds=transfer_seconds,
+            migrations=migrations,
         )

@@ -128,6 +128,37 @@ class ResourceBroker:
                 return len(self._pool)
             return sum(1 for c in self._pool if self._ct(c) == core_type)
 
+    def pool_rejected(self, where: Callable[[int], bool]) -> int:
+        """How many pooled CPUs fail the ``where`` predicate right now —
+        arbiters use it to attribute a short locality-guarded grant to
+        the guard (vs. a genuinely empty pool).  Shared-memory peek, not
+        a DLB call."""
+        with self._lock:
+            return sum(1 for c in self._pool if not where(c))
+
+    def reassign_core(self, job: str, old: int, new: int) -> None:
+        """Whole-app migration moved ``job`` off owned CPU ``old`` onto
+        free CPU ``new``: transfer ownership/holder accounting so later
+        lend/acquire verbs see the post-migration layout.  ``old`` must
+        be owned, held and unlent by ``job`` (the simulator refuses to
+        migrate borrowed or lent cores) and ``new`` unclaimed."""
+        with self._lock:
+            acct = self._jobs[job]
+            if old not in acct.owned or old in acct.lent:
+                raise ValueError(
+                    f"cannot reassign cpu {old}: not an unlent core "
+                    f"owned by {job!r}")
+            if self._owner.get(new) is not None:
+                raise ValueError(
+                    f"cannot reassign onto cpu {new}: owned by "
+                    f"{self._owner[new]!r}")
+            acct.owned.discard(old)
+            acct.owned.add(new)
+            del self._owner[old]
+            del self._holder[old]
+            self._owner[new] = job
+            self._holder[new] = job
+
     def pool_by_type(self) -> dict[str, int]:
         """Pool composition per core type ({""; n} when untyped)."""
         with self._lock:
@@ -178,7 +209,9 @@ class ResourceBroker:
             return ""
 
     def acquire(self, job: str, max_n: int,
-                core_type: str | None = None) -> list[int]:
+                core_type: str | None = None,
+                where: Callable[[int], bool] | None = None,
+                prefer: Callable[[int], float] | None = None) -> list[int]:
         """Job asks the broker for up to ``max_n`` CPUs (1 DLB call).
 
         ``max_n <= 0`` is a caller-side no-op: it returns immediately and
@@ -187,6 +220,15 @@ class ResourceBroker:
 
         ``core_type`` restricts the grant to CPUs of that type (typed
         brokers only — see :meth:`set_core_type_of`).
+
+        ``where``/``prefer`` make the verb locality-aware on multi-node
+        clusters (the acquire carries a domain): ``where`` filters
+        *foreign* CPUs (own cores always pass — reclaiming your own is
+        never a remote borrow) and ``prefer`` sorts the eligible
+        foreign CPUs (stable) by a key such as home-node distance, so
+        near cores are granted — and far ones left for the fairness
+        reservation — first.  Both default to off (single-node runs
+        keep pool FIFO order bit-for-bit).
 
         Preference order: the job's own lent CPUs first (cheap reclaim),
         then foreign CPUs in pool (FIFO) order — minus a reservation for
@@ -206,7 +248,12 @@ class ResourceBroker:
             for c in self._pool:
                 if core_type is not None and self._ct(c) != core_type:
                     continue
-                (own if self._owner[c] == job else foreign).append(c)
+                if self._owner[c] == job:
+                    own.append(c)
+                elif where is None or where(c):
+                    foreign.append(c)
+            if prefer is not None:
+                foreign.sort(key=prefer)
             # Foreign-claimant fairness: demand registered by claimants
             # served less recently than us stays in the pool.
             reserved = sum(a.waiting for n, a in self._jobs.items()

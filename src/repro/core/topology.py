@@ -44,12 +44,18 @@ class CoreType:
     #: available DVFS steps as fractions of the base frequency, ascending;
     #: ``(1.0,)`` means the type cannot be re-clocked
     freq_steps: tuple[float, ...] = (1.0,)
+    #: socket / NUMA domain this type's cores live on — the middle tier
+    #: of the core → socket → node locality hierarchy.  Serialized only
+    #: when nonzero so pre-hierarchy spec dicts round-trip unchanged.
+    socket: int = 0
 
     def __post_init__(self) -> None:
         if self.count < 1:
             raise ValueError(f"count must be >= 1, got {self.count}")
         if self.speed <= 0:
             raise ValueError(f"speed must be > 0, got {self.speed}")
+        if self.socket < 0:
+            raise ValueError(f"socket must be >= 0, got {self.socket}")
         if not self.freq_steps:
             raise ValueError("freq_steps must not be empty")
         steps = tuple(float(q) for q in self.freq_steps)
@@ -68,6 +74,8 @@ class CoreType:
         d: dict[str, Any] = {"name": self.name, "count": self.count,
                              "speed": self.speed,
                              "freq_steps": list(self.freq_steps)}
+        if self.socket != 0:
+            d["socket"] = self.socket
         if self.power is not None:
             d["power"] = {"active": self.power.active,
                           "spin": self.power.spin,
@@ -147,10 +155,22 @@ class CoreTopology:
     def speed_of(self, index: int) -> float:
         return self.core_type_at(index).speed
 
+    def socket_of(self, index: int) -> int:
+        """Socket/NUMA domain of local core ``index`` (wraps like
+        :meth:`core_type_at`); every core maps to exactly one socket."""
+        return self.core_type_at(index).socket
+
+    @property
+    def n_sockets(self) -> int:
+        return len({t.socket for t in self.types})
+
     def fastest_first(self) -> list[CoreType]:
-        """Types ordered fastest→slowest (Δ_c fills fastest cores first);
-        ties keep declaration order."""
-        return sorted(self.types, key=lambda t: -t.speed)
+        """Types ordered fastest→slowest (Δ_c fills fastest cores
+        first); at equal speed, lower socket ids first — the planner
+        fills an app's primary socket before spilling to a remote one.
+        Single-socket topologies keep declaration order (the sort is
+        stable and every key ties)."""
+        return sorted(self.types, key=lambda t: (-t.speed, t.socket))
 
     def mean_speed(self) -> float:
         return (sum(t.count * t.speed for t in self.types)

@@ -8,13 +8,16 @@ from .scheduler import Scheduler
 from .sharded import ShardedScheduler
 from .thread_executor import ThreadExecutor, ExecutorReport
 from .machine import MachineModel, MN4, KNL, HYBRID_PE, DVFS2
+from .cluster import ClusterModel
 from .sim import SimExecutor, SimJobSpec, SimReport, SimCluster
-from .multiapp import run_multi_app, solo_job_spec
+from .multiapp import (run_multi_app, run_multi_node, solo_job_spec,
+                       predicted_demand)
 
 __all__ = [
     "Task", "TaskGraph", "Scheduler", "ShardedScheduler",
     "ThreadExecutor", "ExecutorReport",
-    "MachineModel", "MN4", "KNL", "HYBRID_PE", "DVFS2",
+    "MachineModel", "MN4", "KNL", "HYBRID_PE", "DVFS2", "ClusterModel",
     "SimExecutor", "SimJobSpec", "SimReport", "SimCluster",
-    "run_multi_app", "solo_job_spec",
+    "run_multi_app", "run_multi_node", "solo_job_spec",
+    "predicted_demand",
 ]

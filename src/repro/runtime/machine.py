@@ -29,6 +29,7 @@ charged per monitoring event when the monitoring infrastructure is enabled
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any, Mapping
 
 from ..core.energy import PowerModel
 from ..core.topology import CoreTopology, CoreType
@@ -49,8 +50,18 @@ class MachineModel:
     monitor_event_overhead: float = 5e-8  # per monitoring event
     #: asymmetric core description; None ⇒ homogeneous (all cores equal)
     core_types: tuple[CoreType, ...] | None = None
+    #: service-time dilation for a task whose predecessors completed on
+    #: a *different socket* of this machine (remote-NUMA access on the
+    #: data it consumes).  1.0 (default) = no penalty — single-socket
+    #: machines and every pre-hierarchy model are unaffected; only
+    #: multi-socket topologies (``CoreType.socket``) can trigger it.
+    remote_socket_penalty: float = 1.0
 
     def __post_init__(self) -> None:
+        if self.remote_socket_penalty < 1.0:
+            raise ValueError(
+                f"remote_socket_penalty must be >= 1.0, "
+                f"got {self.remote_socket_penalty}")
         if self.core_types is not None:
             total = sum(t.count for t in self.core_types)
             if total != self.n_cores:
@@ -80,6 +91,32 @@ class MachineModel:
                      freq: float = 1.0) -> float:
         return base / (self.speed_of(core) * freq)
 
+    # -- serialization (ClusterModel round-trip) ----------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        d: dict[str, Any] = {
+            "name": self.name, "n_cores": self.n_cores,
+            "core_speed": self.core_speed,
+            "resume_latency": self.resume_latency,
+            "poll_interval": self.poll_interval,
+            "borrow_latency": self.borrow_latency,
+            "dlb_call_overhead": self.dlb_call_overhead,
+            "monitor_event_overhead": self.monitor_event_overhead,
+        }
+        if self.core_types is not None:
+            d["core_types"] = [t.to_dict() for t in self.core_types]
+        if self.remote_socket_penalty != 1.0:
+            d["remote_socket_penalty"] = self.remote_socket_penalty
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MachineModel":
+        d = dict(d)
+        if d.get("core_types") is not None:
+            d["core_types"] = tuple(CoreType.from_dict(t)
+                                    for t in d["core_types"])
+        return cls(**d)
+
 
 MN4 = MachineModel(name="MN4", n_cores=48, core_speed=1.0)
 KNL = MachineModel(name="KNL", n_cores=64, core_speed=0.62)
@@ -101,6 +138,8 @@ HYBRID_PE = MachineModel(
 DVFS2 = MachineModel(
     name="DVFS2", n_cores=48,
     core_types=(
-        CoreType(name="S0", count=24, freq_steps=(0.75, 0.875, 1.0)),
-        CoreType(name="S1", count=24, freq_steps=(0.75, 0.875, 1.0)),
+        CoreType(name="S0", count=24, freq_steps=(0.75, 0.875, 1.0),
+                 socket=0),
+        CoreType(name="S1", count=24, freq_steps=(0.75, 0.875, 1.0),
+                 socket=1),
     ))

@@ -44,6 +44,7 @@ from ..core.prediction import DEFAULT_PREDICTION_RATE_S, PredictionConfig
 from ..core.sharing import ResourceBroker
 from ..core.topology import CoreTopology
 from ..workloads.arrivals import ArrivalProcess
+from .cluster import ClusterModel
 from .machine import MachineModel
 from .scheduler import Scheduler
 from .task import Task, TaskGraph
@@ -86,6 +87,10 @@ class SimJobSpec:
     arrivals: ArrivalProcess | None = None
     #: runtime event bus shared with trace recorders; None ⇒ per-job bus
     bus: EventBus | None = None
+    #: multi-node clusters: the app's home node (None ⇒ the node of the
+    #: first owned cpu, or node 0 with default cpus).  Ignored on flat
+    #: machines and 1-node clusters.
+    node: int | None = None
 
     def governor_spec(self, n_cpus: int) -> GovernorSpec:
         if self.governor is not None:
@@ -109,7 +114,9 @@ class _SimJob:
         "cluster", "spec", "name", "graph", "bus", "cpus", "governor",
         "monitor", "scheduler", "predictor", "policy", "energy",
         "manager", "sharing", "rate_s", "epoch", "waking", "borrowed",
-        "t_done", "monitor_events", "arrivals_pending", "spin_budget")
+        "t_done", "monitor_events", "arrivals_pending", "spin_budget",
+        "home", "mm", "socket_penalty", "transfers", "transfer_seconds",
+        "migrations", "pending_moves")
 
     def __init__(self, cluster: "SimCluster", spec: SimJobSpec,
                  cpus: list[int]) -> None:
@@ -117,14 +124,32 @@ class _SimJob:
         self.spec = spec
         self.name = spec.name
         self.graph = spec.graph
+        cm = cluster.cluster_model
+        multi = cluster._multi
+        #: home node + home machine: every latency constant and service
+        #: time this job pays comes from its own node's machine model
+        #: (identical to ``cluster.machine`` on flat/1-node clusters)
+        self.home = (spec.node if spec.node is not None
+                     else (cm.node_of(cpus[0]) if multi else 0))
+        self.mm = cm.nodes[self.home] if multi else cluster.machine
+        machine = self.mm
         # A job-private bus is namespaced with the job name, so a trace
         # recorder attached to several jobs' buses yields one combined,
         # per-app-splittable multi-app trace.  An externally provided
-        # bus keeps whatever namespace its creator chose.
-        self.bus = spec.bus if spec.bus is not None \
-            else EventBus(app=spec.name)
+        # bus keeps whatever namespace its creator chose.  Multi-node
+        # buses additionally stamp the home node (and worker sockets on
+        # multi-socket nodes) onto every event.
+        if spec.bus is not None:
+            self.bus = spec.bus
+        elif multi:
+            self.bus = EventBus(
+                app=spec.name, node=self.home,
+                socket_of=(cm.socket_of if any(
+                    m.topology().n_sockets > 1 for m in cm.nodes)
+                    else None))
+        else:
+            self.bus = EventBus(app=spec.name)
         gspec = spec.governor_spec(len(cpus))
-        machine = cluster.machine
         if machine.core_types is not None and gspec.topology is None:
             # asymmetric machine: hand the topology to the whole stack
             # (per-type monitoring/energy, speed-aware Δ, park order).
@@ -132,21 +157,32 @@ class _SimJob:
             # its power accounting matches the per-core service speeds
             # the machine applies; the id list is grouped by type so the
             # governor's positional mapping lines up with the machine's.
+            # Global cpu ids wrap per node on multi-node clusters.
             topo = machine.topology()
+            loc = cm.local_id if multi else (lambda c: c)
             if len(cpus) == machine.n_cores:
                 gspec = replace(gspec, topology=topo)
             else:
                 rank = {t.name: i for i, t in enumerate(topo.types)}
                 cpus = sorted(cpus,
-                              key=lambda c: (rank[topo.type_of(c)], c))
+                              key=lambda c: (rank[topo.type_of(loc(c))], c))
                 counts: dict[str, int] = {}
                 for c in cpus:
-                    ct = topo.type_of(c)
+                    ct = topo.type_of(loc(c))
                     counts[ct] = counts.get(ct, 0) + 1
                 sliced = CoreTopology(types=tuple(
                     replace(t, count=counts[t.name])
                     for t in topo.types if t.name in counts))
                 gspec = replace(gspec, topology=sliced)
+        elif multi and gspec.topology is None:
+            # Homogeneous node on a multi-node cluster: hand the stack
+            # an explicit single-type topology so borrowed remote cores
+            # can be announced under their locality-tier type name
+            # ("core@n<k>") and the monitor learns per-tier costs —
+            # the hetero machinery on one type reproduces the
+            # homogeneous algorithms decision-for-decision.
+            gspec = replace(gspec,
+                            topology=CoreTopology.homogeneous(len(cpus)))
         self.cpus = cpus
         self.governor = ResourceGovernor(
             gspec, clock=lambda: cluster.now,
@@ -174,6 +210,19 @@ class _SimJob:
         #: the per-empty-poll path
         self.spin_budget: int | None = getattr(self.policy, "spin_budget",
                                                None)
+        #: home machine's cross-socket dilation, pre-resolved (None when
+        #: inert: single-socket node or penalty 1.0 — the common case
+        #: pays one attribute load per task start, nothing more)
+        self.socket_penalty: float | None = (
+            machine.remote_socket_penalty
+            if (machine.remote_socket_penalty != 1.0
+                and machine.topology().n_sockets > 1) else None)
+        self.transfers = 0
+        self.transfer_seconds = 0.0
+        self.migrations = 0
+        #: cores granted to an in-flight migration while EXECUTING; they
+        #: move (old → new global id) at their next task boundary
+        self.pending_moves: dict[int, int] | None = None
 
     @property
     def done(self) -> bool:
@@ -199,27 +248,49 @@ class SimCluster:
     registered policy.
     """
 
-    def __init__(self, machine: MachineModel,
+    def __init__(self, machine: MachineModel | ClusterModel,
                  broker: ResourceBroker | None = None,
                  threadsafe: bool = False) -> None:
+        if isinstance(machine, ClusterModel):
+            #: the locality hierarchy; a 1-node cluster takes the flat
+            #: single-machine paths end to end (byte parity with the
+            #: equivalent MachineModel by construction)
+            self.cluster_model: ClusterModel | None = machine
+            self._multi = machine.n_nodes > 1
+            machine = machine.nodes[0]
+        else:
+            self.cluster_model = None
+            self._multi = False
         self.machine = machine
         self.broker = broker
         self.threadsafe = threadsafe
         self.arbiter: ClusterArbiter | None = None
         if broker is not None:
-            topo = None
-            if machine.core_types is not None:
-                # per-core-type pool accounting: a P-core lent must not
-                # come back as an E-core grant
-                if not broker.typed:
-                    broker.set_core_type_of(machine.topology().type_of)
-                topo = machine.topology()
-            self.arbiter = ClusterArbiter(broker, topology=topo)
+            if self._multi:
+                cm = self.cluster_model
+                assert cm is not None
+                if (not broker.typed and any(
+                        m.core_types is not None for m in cm.nodes)):
+                    # asymmetric node(s): per-type pool accounting over
+                    # the global core-id space
+                    broker.set_core_type_of(cm.type_of)
+                self.arbiter = ClusterArbiter(broker, cluster=cm)
+            else:
+                topo = None
+                if machine.core_types is not None:
+                    # per-core-type pool accounting: a P-core lent must
+                    # not come back as an E-core grant
+                    if not broker.typed:
+                        broker.set_core_type_of(machine.topology().type_of)
+                    topo = machine.topology()
+                self.arbiter = ClusterArbiter(broker, topology=topo)
         self.now = 0.0
         #: per-task fast path: homogeneous machines divide service times
-        #: by one constant (None on machines with typed cores)
+        #: by one constant (None on machines with typed cores and on
+        #: multi-node clusters, where locality costs are per-task)
         self._flat_speed = (machine.core_speed
-                            if machine.core_types is None else None)
+                            if machine.core_types is None
+                            and not self._multi else None)
         # Flattened heap entries (t, seq, kind, a, b, c, d): pushing one
         # event allocates a single tuple — no nested payload tuple — and
         # the unique seq tiebreak guarantees comparisons never reach the
@@ -238,14 +309,19 @@ class SimCluster:
     def add_job(self, spec: SimJobSpec) -> _SimJob:
         cpus = spec.cpus
         if cpus is None:
-            base = sum(len(j.cpus) for j in self.jobs.values())
-            cpus = list(range(base, base + self.machine.n_cores))
+            if self._multi:
+                assert self.cluster_model is not None
+                cpus = list(self.cluster_model.cores_of(
+                    spec.node if spec.node is not None else 0))
+            else:
+                base = sum(len(j.cpus) for j in self.jobs.values())
+                cpus = list(range(base, base + self.machine.n_cores))
         job = _SimJob(self, spec, list(cpus))
         self.jobs[spec.name] = job
         if self.broker is not None:
-            self.broker.register_job(spec.name, list(cpus))
+            self.broker.register_job(spec.name, list(job.cpus))
             assert self.arbiter is not None
-            self.arbiter.register(spec.name, job.governor)
+            self.arbiter.register(spec.name, job.governor, node=job.home)
         return job
 
     def _push(self, t: float, kind: int, a: Any = None, b: Any = None,
@@ -314,6 +390,10 @@ class SimCluster:
             monitor_events=job.monitor_events,
             sharing=(self.arbiter.stats[job.name].as_dict()
                      if self.arbiter is not None else None),
+            node=job.home if self._multi else None,
+            transfers=job.transfers,
+            transfer_seconds=job.transfer_seconds,
+            migrations=job.migrations,
         )
 
     def _submit_or_schedule(self, job: _SimJob) -> None:
@@ -350,6 +430,9 @@ class SimCluster:
 
     def _on_finish(self, job: _SimJob, cpu: int, task: Task,
                    elapsed: float) -> None:
+        # successors consult this for cross-node transfer / cross-socket
+        # penalty on the dependency edge; stamp before any dispatch
+        task.completed_on = cpu
         job.manager.task_finished(cpu)
         newly = job.scheduler.complete(task, elapsed, worker_id=cpu)
         if job.monitor is not None:
@@ -362,6 +445,14 @@ class SimCluster:
                 # a finished app claims nothing: drop any fairness
                 # reservation its last short acquire registered
                 self.broker.register_demand(job.name, 0)
+        pm = job.pending_moves
+        if pm is not None and cpu in pm:
+            # an in-flight migration was waiting for this core's task
+            # boundary: move it now instead of polling on the old node
+            self._move_core(job, cpu, pm.pop(cpu))
+            if newly:
+                self._work_added(job)
+            return
         if newly:
             self._work_added(job)
         if job.manager.state_of(cpu) is not WorkerState.SPIN:
@@ -386,7 +477,7 @@ class SimCluster:
                                  lambda c: self._hand_cpu_to(job, c))
             n_calls = self.broker.job_calls(job.name) - before
             if n_calls:
-                self._push(self.now + n_calls * self.machine.dlb_call_overhead,
+                self._push(self.now + n_calls * job.mm.dlb_call_overhead,
                            _RESUME, job, cpu)
                 return
         self._poll(job, cpu)
@@ -478,7 +569,7 @@ class SimCluster:
             budget = job.spin_budget
             if budget is not None:
                 job.epoch[cpu] += 1
-                self._push(self.now + budget * self.machine.poll_interval,
+                self._push(self.now + budget * job.mm.poll_interval,
                            _SPIN_EXPIRE, job, cpu, job.epoch[cpu])
         elif decision is PollDecision.LEND:
             self._lend(job, cpu)
@@ -498,9 +589,70 @@ class SimCluster:
             # would resolve per-core speed and frequency to the same
             # constants on every single task
             dur = st / flat
-        else:
+        elif not self._multi:
             dur = self.machine.service_time(
                 st, core=cpu, freq=job.governor.frequency_of(cpu))
+            sp = job.socket_penalty
+            if sp is not None:
+                # cross-socket dependency: the task consumes data its
+                # predecessor produced on the other NUMA domain
+                topo = self.machine._topology
+                sk = topo.socket_of(cpu)
+                for dep in task.deps:
+                    co = dep.completed_on
+                    if co is not None and topo.socket_of(co) != sk:
+                        dur *= sp
+                        break
+        else:
+            # Multi-node: service time comes from the executing core's
+            # own node, dilated by the remote penalty when that node is
+            # not the app's home; cross-node dependency edges charge a
+            # network transfer that delays the start but is NOT part of
+            # the task's measured elapsed (wire time, not compute time).
+            cm = self.cluster_model
+            node = cm.node_of(cpu)
+            nm = cm.nodes[node]
+            dur = nm.service_time(
+                st, core=cpu - cm.base_of(node),
+                freq=job.governor.frequency_of(cpu))
+            if node != job.home:
+                dur *= cm.penalty(job.home, node)
+            elif job.socket_penalty is not None:
+                topo = nm._topology
+                base = cm.base_of(node)
+                sk = topo.socket_of(cpu - base)
+                for dep in task.deps:
+                    co = dep.completed_on
+                    if (co is not None and cm.node_of(co) == node
+                            and topo.socket_of(co - base) != sk):
+                        dur *= job.socket_penalty
+                        break
+            xfer = 0.0
+            src = node
+            if cm.transfer_latency > 0.0:
+                # transfers from several predecessors overlap on the
+                # wire: the slowest edge gates the start
+                for dep in task.deps:
+                    co = dep.completed_on
+                    if co is not None:
+                        dn = cm.node_of(co)
+                        if dn != node:
+                            x = cm.transfer_time(dn, node)
+                            if x > xfer:
+                                xfer, src = x, dn
+            if job.monitor is not None:
+                dur += 3 * nm.monitor_event_overhead
+            if xfer > 0.0:
+                job.transfers += 1
+                job.transfer_seconds += xfer
+                if job.bus.interested(EventKind.TRANSFER):
+                    job.bus.publish(RuntimeEvent(
+                        kind=EventKind.TRANSFER, time=self.now,
+                        task_id=task.task_id, worker_id=cpu,
+                        elapsed=xfer,
+                        data={"src": src, "dst": node}))
+            self._push(self.now + xfer + dur, _FINISH, job, cpu, task, dur)
+            return
         if job.monitor is not None:
             dur += 3 * self.machine.monitor_event_overhead
         self._push(self.now + dur, _FINISH, job, cpu, task, dur)
@@ -541,7 +693,7 @@ class SimCluster:
     def _resume_workers(self, job: _SimJob, woken: list[int]) -> None:
         for w in woken:
             job.waking.add(w)
-            self._push(self.now + self.machine.resume_latency, _RESUME,
+            self._push(self.now + job.mm.resume_latency, _RESUME,
                        job, w)
 
     # -- DLB mechanics ---------------------------------------------------------------
@@ -580,21 +732,119 @@ class SimCluster:
                 lambda c: self._hand_cpu_to(job, c))
 
     def _hand_cpu_to(self, job: _SimJob, cpu: int) -> None:
-        """CPU (re)arrives at ``job`` after the DLB hand-over latency."""
-        if cpu in job.manager.states():
+        """CPU (re)arrives at ``job`` after the DLB hand-over latency
+        (plus the network transfer when it crosses nodes)."""
+        lat = job.mm.borrow_latency
+        src = None
+        if self._multi:
+            cm = self.cluster_model
+            src = cm.node_of(cpu)
+            if src != job.home:
+                lat += cm.transfer_time(src, job.home)
+        if job.manager.state_of(cpu) is not None:
             job.manager.reclaim(cpu)
         else:
             job.borrowed.add(cpu)
             # announce the borrowed core's true identity so α_{j,c},
             # energy billing and DVFS lookups use the machine's type,
             # not the job's (possibly sliced) positional mapping
-            ct = (self.machine.topology().core_type_at(cpu)
-                  if self.machine.core_types is not None else None)
+            if not self._multi:
+                ct = (self.machine.topology().core_type_at(cpu)
+                      if self.machine.core_types is not None else None)
+            else:
+                # cross-node borrows carry their locality tier in the
+                # type name ("P@n1"): the monitor learns a separate
+                # (task type × core type × tier) α for remote silicon —
+                # its service times include the remote penalty — and
+                # compute_plan never confuses it with home-node cores
+                nm = self.cluster_model.nodes[src]
+                ct = nm.topology().core_type_at(
+                    cpu - self.cluster_model.base_of(src))
+                if src != job.home:
+                    ct = replace(ct, name=f"{ct.name}@n{src}", count=1)
             job.governor.adopt_worker(cpu, core_type=ct)
         job.epoch[cpu] = job.epoch.get(cpu, 0) + 1
         job.waking.add(cpu)
-        self._push(self.now + self.machine.borrow_latency, _RESUME,
-                   job, cpu)
+        self._push(self.now + lat, _RESUME, job, cpu)
+
+    # -- whole-app migration -----------------------------------------------------
+
+    def migrate_job(self, name: str, dst: int) -> None:
+        """Explicit costed migration verb: move app ``name`` and every
+        core it owns to free cores on node ``dst``.
+
+        Each core pays ``migration_latency`` before resuming on the new
+        node; cores mid-task move at their next task boundary (the
+        cooperative-return discipline borrowed cores already follow).
+        The app must be *settled*: no borrowed cores held and none of
+        its own cores lent out — migrating IOUs would silently rewrite
+        another app's accounting.
+        """
+        if not self._multi:
+            raise ValueError("migrate_job needs a multi-node ClusterModel")
+        cm = self.cluster_model
+        assert cm is not None
+        job = self.jobs[name]
+        if dst == job.home:
+            return
+        if not 0 <= dst < cm.n_nodes:
+            raise ValueError(f"node {dst} out of range [0, {cm.n_nodes})")
+        if job.borrowed:
+            raise ValueError(
+                f"cannot migrate {name!r}: holding "
+                f"{len(job.borrowed)} borrowed core(s)")
+        if any(job.manager.state_of(c) is WorkerState.LENT
+               for c in job.cpus):
+            raise ValueError(
+                f"cannot migrate {name!r}: some of its cores are "
+                "lent out through the broker")
+        used: set[int] = set()
+        for j in self.jobs.values():
+            used.update(j.cpus)
+        free = [c for c in cm.cores_of(dst) if c not in used]
+        if len(free) < len(job.cpus):
+            raise ValueError(
+                f"node {dst} has {len(free)} free core(s); "
+                f"{name!r} needs {len(job.cpus)}")
+        mapping = dict(zip(list(job.cpus), free))
+        job.home = dst
+        job.mm = cm.nodes[dst]
+        job.socket_penalty = (
+            job.mm.remote_socket_penalty
+            if (job.mm.remote_socket_penalty != 1.0
+                and job.mm.topology().n_sockets > 1) else None)
+        job.migrations += 1
+        job.bus.node = dst   # subsequent events carry the new home
+        if self.arbiter is not None:
+            self.arbiter.note_migration(name, dst)
+        for old, new in mapping.items():
+            if job.manager.state_of(old) is WorkerState.ACTIVE:
+                if job.pending_moves is None:
+                    job.pending_moves = {}
+                job.pending_moves[old] = new
+            else:
+                self._move_core(job, old, new)
+
+    def _move_core(self, job: _SimJob, old: int, new: int) -> None:
+        """Re-home one owned core: retire ``old`` (its energy timeline
+        closes OFF) and bring up ``new`` on the destination node after
+        ``migration_latency``."""
+        cm = self.cluster_model
+        assert cm is not None
+        job.epoch.pop(old, None)
+        job.waking.discard(old)
+        job.manager.remove_worker(old)
+        job.cpus[job.cpus.index(old)] = new
+        if self.broker is not None:
+            self.broker.reassign_core(job.name, old, new)
+        # always announce the type (for homogeneous nodes the synthetic
+        # "core" type matches the injected job topology), so the new
+        # worker's α/energy/park accounting lands under the right name
+        ct = job.mm.topology().core_type_at(new - cm.base_of(job.home))
+        job.governor.adopt_worker(new, core_type=ct)
+        job.epoch[new] = job.epoch.get(new, 0) + 1
+        job.waking.add(new)
+        self._push(self.now + cm.migration_latency, _RESUME, job, new)
 
 
 class SimExecutor:

@@ -41,6 +41,10 @@ class Task:
     unmet: int = 0
     successors: list["Task"] = field(default_factory=list)
     done: bool = False
+    #: global core id this task completed on (stamped by the simulator;
+    #: successors use it to charge cross-node transfer / remote-socket
+    #: penalties on the dependency edge).  None outside the simulator.
+    completed_on: int | None = None
 
     def __hash__(self) -> int:
         return self.task_id

@@ -26,6 +26,7 @@ from typing import Iterable
 
 from ..core.events import EventKind, RuntimeEvent
 from ..core.governor import GovernorReport, GovernorSpec
+from ..runtime.cluster import ClusterModel
 from ..runtime.machine import MachineModel
 from ..runtime.task import Task, TaskGraph
 from ..workloads.arrivals import FixedTimeline
@@ -68,8 +69,16 @@ class TraceReplayer:
         """A replayer over this app's slice of a multi-app trace — the
         per-app graphs/timelines rebuild independently, so a recorded
         co-schedule can be replayed app-by-app or reassembled into a
-        fresh multi-app cluster."""
-        return TraceReplayer([ev for ev in self.events if ev.app == app])
+        fresh multi-app cluster.
+
+        Raises ``KeyError`` (listing the app ids the trace does contain)
+        for an unknown app — an empty replayer would surface much later
+        as a confusing zero-task replay."""
+        events = [ev for ev in self.events if ev.app == app]
+        if not events:
+            raise KeyError(
+                f"no events for app {app!r}; trace contains {self.apps()}")
+        return TraceReplayer(events)
 
     # -- graph reconstruction ----------------------------------------------
 
@@ -88,11 +97,18 @@ class TraceReplayer:
         submitted: list[RuntimeEvent] = []
         elapsed: dict[int, float] = {}
         exec_at: dict[int, float] = {}
+        xfer: dict[int, float] = {}
         for ev in self.events:
             if ev.kind is EventKind.TASK_SUBMITTED:
                 submitted.append(ev)
             elif ev.kind is EventKind.TASK_EXECUTE and ev.task_id is not None:
                 exec_at[ev.task_id] = ev.time
+            elif (ev.kind is EventKind.TRANSFER and ev.task_id is not None
+                  and ev.elapsed is not None):
+                # multi-node trace: the task's EXECUTE→COMPLETED span
+                # includes wire time that is not service time — the
+                # replay cluster re-derives the transfer itself
+                xfer[ev.task_id] = ev.elapsed
             elif (ev.kind is EventKind.TASK_COMPLETED
                   and ev.task_id is not None and ev.elapsed is not None):
                 # Prefer the EXECUTE→COMPLETED interval: it is the
@@ -110,7 +126,7 @@ class TraceReplayer:
                 if start is None:
                     elapsed[ev.task_id] = ev.elapsed
                 else:
-                    interval = ev.time - start
+                    interval = ev.time - start - xfer.get(ev.task_id, 0.0)
                     if abs(interval - ev.elapsed) <= 1e-9 * abs(interval):
                         elapsed[ev.task_id] = ev.elapsed
                     else:
@@ -145,6 +161,11 @@ class TraceReplayer:
                         service_time=elapsed[ev.task_id])
             by_old_id[ev.task_id] = task
             release.append(rt)
+            # Added dep-less and wired below: TaskGraph.add() dedups
+            # deps through a set, which would permute the recorded dep
+            # order — and the replay's re-recorded TASK_SUBMITTED events
+            # must reproduce the original dep lists byte-for-byte.
+            graph.add(task)
         # Dependencies/parents are wired in a second pass: open-mode
         # submission order is not topological (a dependent can be
         # submitted before its dependency), so resolving inline would
@@ -166,7 +187,6 @@ class TraceReplayer:
             task.deps = [by_old_id[d] for d in ev.data.get("deps", ())]
             task.parent = (by_old_id[parent_id] if parent_id is not None
                            else None)
-            graph.add(task)
         if all(rt <= 0.0 for rt in release):
             return graph, None
         for task, rt in zip(graph.tasks, release):
@@ -181,13 +201,16 @@ class TraceReplayer:
     # -- one-call what-if --------------------------------------------------
 
     def replay(self, spec: GovernorSpec,
-               machine: MachineModel | None = None,
+               machine: MachineModel | ClusterModel | None = None,
                bus=None) -> GovernorReport:
         """Replay the trace in the simulator under ``spec``.
 
         Default machine: a neutral model with ``spec.resources`` cores.
-        Pass ``bus`` (an :class:`~repro.core.events.EventBus`) to observe
-        or re-record the replay.
+        Pass a :class:`~repro.runtime.cluster.ClusterModel` (use
+        :meth:`ClusterModel.replay_model` to neutralize it first) to
+        replay onto a multi-node cluster.  Pass ``bus`` (an
+        :class:`~repro.core.events.EventBus`) to observe or re-record
+        the replay.
         """
         from ..runtime.sim import SimCluster, SimJobSpec
 

@@ -196,7 +196,8 @@ class TestMultiAppRun:
                                           for r in rep.apps.values())
         for r in rep.apps.values():
             assert set(r.sharing) == {"lends", "acquired", "returns",
-                                      "reclaims"}
+                                      "reclaims", "guard_refusals",
+                                      "migrations"}
         # co-location actually traded CPUs somewhere
         assert any(r.sharing["lends"] > 0 for r in rep.apps.values())
 
