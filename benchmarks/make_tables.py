@@ -109,6 +109,37 @@ def cluster_table() -> None:
               f"| {r['transfers']} | {r['guard_refusals']} |")
 
 
+def faults_table() -> None:
+    """Dynamic-conditions tables from the committed
+    ``BENCH_faults.json`` (see ``benchmarks/bench_faults.py``)."""
+    bench = pathlib.Path(__file__).resolve().parents[1] \
+        / "BENCH_faults.json"
+    if not bench.exists():
+        print("\n(BENCH_faults.json not found — run "
+              "`python -m benchmarks.run --only faults` first)")
+        return
+    rows = json.loads(bench.read_text())["rows"]
+    print("\n| machine | policy | cap W | cap at s | makespan s "
+          "| aggregate EDP | violation s |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["scenario"] != "power-cap":
+            continue
+        print(f"| {r['machine']} | {r['policy']} | {r['cap_w']} "
+              f"| {r['cap_at_s']:.4f} | {r['time_s']:.4f} "
+              f"| {r['edp']:.4f} | {r['cap_violation_s']:.4f} |")
+    print("\n| scenario | machine | policy | makespan s | healthy s "
+          "| slowdown % | EDP | healthy EDP |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["scenario"] not in ("faults", "thermal"):
+            continue
+        print(f"| {r['scenario']} | {r['machine']} | {r['policy']} "
+              f"| {r['time_s']:.4f} | {r['healthy_time_s']:.4f} "
+              f"| {r['slowdown_pct']:.1f} | {r['edp']:.6f} "
+              f"| {r['healthy_edp']:.6f} |")
+
+
 if __name__ == "__main__":
     print("## Generated tables (from artifacts/dryrun)")
     print("\n### §Dry-run")
@@ -117,3 +148,5 @@ if __name__ == "__main__":
     roofline_table()
     print("\n### §Cluster (multi-node placement + locality guard)")
     cluster_table()
+    print("\n### §Faults (power caps, core faults, thermal throttling)")
+    faults_table()

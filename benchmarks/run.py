@@ -26,7 +26,7 @@ from pathlib import Path
 
 SECTIONS = ["accuracy", "policies", "sharing", "overhead", "serving",
             "roofline", "open_workloads", "heterogeneous", "multiapp",
-            "cluster", "simperf", "threadperf"]
+            "cluster", "simperf", "threadperf", "faults"]
 
 CAPTIONS = {
     "accuracy": "(paper Table 2)",
@@ -39,6 +39,7 @@ CAPTIONS = {
     "cluster": "(beyond-paper: multi-node placement + locality guard)",
     "simperf": "(simulator event-loop throughput)",
     "threadperf": "(real-thread executor throughput)",
+    "faults": "(beyond-paper: power caps, core faults, thermal)",
 }
 
 

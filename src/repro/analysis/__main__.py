@@ -8,8 +8,9 @@ the required CI ``analysis`` job.
 The lock/field pass runs on every target file; the determinism lint
 only on files in its scope: ``runtime/`` (except ``thread_executor.py``,
 whose real threads legitimately use the real clock), ``trace/``,
-``workloads/``, and any module whose name mentions ``sim`` or
-``replay``.
+``workloads/``, ``core/conditions.py`` (the machine-conditions timeline
+feeds the simulator and the trace round trip), and any module whose
+name mentions ``sim`` or ``replay``.
 """
 
 from __future__ import annotations
@@ -28,6 +29,10 @@ _DETERMINISM_DIRS = {"trace", "workloads"}
 def determinism_scope(path: Path) -> bool:
     if path.name == "thread_executor.py":
         return False
+    # the machine-conditions timeline feeds the simulator and the trace
+    # round trip, so it must be as wall-clock-free as they are
+    if path.name == "conditions.py":
+        return True
     parts = set(path.parts)
     if parts & _DETERMINISM_DIRS or "runtime" in parts:
         return True

@@ -77,12 +77,20 @@ class AppShareStats:
     #: min_borrow_speed) refused them — the borrows the guard avoided
     guard_refusals: int = 0
     migrations: int = 0  # whole-app node migrations
+    #: acquires the cluster-wide power budget refused (waking one more
+    #: borrowed core would have pushed the joint draw over the cap)
+    power_refusals: int = 0
 
     def as_dict(self) -> dict[str, int]:
-        return {"lends": self.lends, "acquired": self.acquired,
-                "returns": self.returns, "reclaims": self.reclaims,
-                "guard_refusals": self.guard_refusals,
-                "migrations": self.migrations}
+        d = {"lends": self.lends, "acquired": self.acquired,
+             "returns": self.returns, "reclaims": self.reclaims,
+             "guard_refusals": self.guard_refusals,
+             "migrations": self.migrations}
+        if self.power_refusals:
+            # serialized only when the power budget actually refused
+            # something, so cap-free reports stay bit-identical
+            d["power_refusals"] = self.power_refusals
+        return d
 
 
 class ClusterArbiter:
@@ -107,6 +115,44 @@ class ClusterArbiter:
         self.stats: dict[str, AppShareStats] = {}
         #: app -> home node (0 on single-node clusters)
         self.homes: dict[str, int] = {}
+        #: cluster-wide power budget (None = uncapped; see
+        #: :meth:`set_power_cap`)
+        self.power_cap_w: float | None = None
+        self._current_watts: Callable[[], float] | None = None
+        self._core_active_w: float = 1.0
+
+    # -- power budget --------------------------------------------------------
+
+    def set_power_cap(self, watts: float | None,
+                      current_watts: Callable[[], float] | None = None,
+                      core_active_w: float = 1.0) -> None:
+        """Install (or lift) a cluster-wide power budget.
+
+        The budget is a *shared* resource: before granting an acquire,
+        :meth:`execute` checks that waking the requested cores — each
+        estimated at ``core_active_w`` — still fits under the cap given
+        the frontend-supplied ``current_watts()`` (the sum of every
+        app's live meter draw).  Requests the budget cannot fit are
+        trimmed and counted in the app's
+        :attr:`AppShareStats.power_refusals`.
+        """
+        self.power_cap_w = watts
+        if current_watts is not None:
+            self._current_watts = current_watts
+        if core_active_w > 0.0:
+            self._core_active_w = core_active_w
+
+    def _power_allowance(self, n_req: int) -> tuple[int, int]:
+        """Clamp an ``n_req``-core acquire to the power headroom;
+        returns ``(granted_budget, refused)``."""
+        if (self.power_cap_w is None or self._current_watts is None
+                or n_req <= 0):
+            return n_req, 0
+        headroom = self.power_cap_w - self._current_watts()
+        allow = max(0, int(headroom / self._core_active_w + 1e-9))
+        if allow >= n_req:
+            return n_req, 0
+        return allow, n_req - allow
 
     # -- registration --------------------------------------------------------
 
@@ -294,22 +340,27 @@ class ClusterArbiter:
         #: path reclaims mid-flight (fast own silicon before slow
         #: foreign) so it opts out of the shared tail reclaim
         tail_reclaim = True
+        # Cluster power budget: trim the request to what the joint draw
+        # can absorb (no-op while no cap is installed).
+        n_want, refused = self._power_allowance(plan.acquire)
+        if refused:
+            stats.power_refusals += refused
         if plan.eager:
             # LeWI-style: one broker call per CPU (per-thread acquisition).
-            for _ in range(plan.acquire):
+            for _ in range(n_want):
                 batch = self.broker.acquire(name, 1, where=where,
                                             prefer=prefer)
                 if not batch:
                     break
                 got.extend(batch)
         elif plan.acquire_by_type is None:
-            got = self.broker.acquire(name, plan.acquire, where=where,
-                                      prefer=prefer)
+            got = self.broker.acquire(name, n_want, where=where,
+                                      prefer=prefer) if n_want > 0 else []
         else:
             tail_reclaim = False
             # Heterogeneous path.  1) Own-type deficits first (fastest
             # types first, cheap typed peek gates each DLB call).
-            want = plan.acquire
+            want = n_want
             for ct, n in plan.acquire_by_type.items():
                 if want <= 0:
                     break
@@ -350,15 +401,15 @@ class ClusterArbiter:
             # their own shortfall; record the plan-level one
             self.broker.register_demand(name, want if want > 0 else 0)
         stats.acquired += len(got)
-        if where is not None and len(got) < plan.acquire:
+        if where is not None and len(got) < n_want:
             # A short locality-guarded grant: attribute up to the
             # shortfall to pooled CPUs the guard refused (vs. a
             # genuinely empty pool) — the borrows the guard avoided.
-            stats.guard_refusals += min(plan.acquire - len(got),
+            stats.guard_refusals += min(n_want - len(got),
                                         self.broker.pool_rejected(where))
         for cpu in got:
             hand_cpu(cpu)
-        if (tail_reclaim and len(got) < plan.acquire
+        if (tail_reclaim and len(got) < n_want
                 and plan.reclaim_if_short
                 and self.broker.lent_out(name) > 0):
             # Pool exhausted but our own CPUs are borrowed: flag a reclaim.

@@ -70,9 +70,24 @@ class PowerModel:
         object.__setattr__(self, "_by_state", by_state)
 
     def power(self, state: CoreState, freq: float = 1.0) -> float:
+        """Draw at ``state`` and DVFS step ``freq``.
+
+        Contract: ``freq`` is clamped to the physical band [0, 1].  A
+        ``PowerModel`` has no knowledge of a core type's DVFS steps —
+        typed validation lives where the type is known
+        (:meth:`MachineModel.service_time`,
+        :meth:`ResourceGovernor.apply_frequencies`) — but the cubic
+        must never extrapolate: ``freq > 1`` used to silently yield
+        super-unit power and ``freq < 0`` a *negative* dynamic term.
+        In-band frequencies are returned bit-identically.
+        """
         base = self._by_state[state.idx]
         if freq != 1.0 and (state is CoreState.ACTIVE
                             or state is CoreState.SPIN):
+            if freq > 1.0:
+                return base
+            if freq < 0.0:
+                freq = 0.0
             # cubic dynamic component over the static (idle) floor
             return self.idle + (base - self.idle) * freq ** 3
         return base
@@ -116,6 +131,14 @@ class EnergyMeter:
                        for i in range(n_cores)}
         self._t0 = t0
         self._t_end: float | None = None
+        # Power-cap accounting is lazy: nothing below is touched (and
+        # the hot set_state path pays one falsy attribute check) until
+        # the first set_power_cap() call.
+        self._cap: float | None = None
+        self._cap_track = False
+        self._watts = 0.0
+        self._cap_since = 0.0
+        self._cap_violation_s = 0.0
 
     def add_core(self, core_id: int, state: CoreState, now: float,
                  power: PowerModel | None = None,
@@ -126,6 +149,9 @@ class EnergyMeter:
             # the accumulated history — overwriting the timeline used to
             # erase the earlier borrow window's energy.  The DVFS step
             # resets to full; the owner re-applies its current plan.
+            if self._cap_track:
+                self._cap_tick(now)
+                self._watts -= tl.power.power(tl.state, tl.freq)
             tl.close_segment(now)
             tl.state = state
             tl.freq = 1.0
@@ -133,10 +159,15 @@ class EnergyMeter:
                 tl.power = power
             if core_type:
                 tl.core_type = core_type
+            if self._cap_track:
+                self._watts += tl.power.power(state, 1.0)
             return
         self._cores[core_id] = _CoreTimeline(
             state, now, power=power or self.power_model,
             core_type=core_type)
+        if self._cap_track:
+            self._cap_tick(now)
+            self._watts += self._cores[core_id].power.power(state, 1.0)
 
     def set_state(self, core_id: int, state: CoreState, now: float) -> None:
         """Transition a core; identical-state calls coalesce (the open
@@ -158,19 +189,75 @@ class EnergyMeter:
                                        or state is CoreState.SPIN):
             tl.resumes += 1
         tl.state = state
+        if self._cap_track:
+            self._cap_tick(now)
+            self._watts += (tl.power.power(state, tl.freq)
+                            - tl.power.power(prev, tl.freq))
 
     def set_frequency(self, core_id: int, freq: float, now: float) -> None:
         """Re-clock a core: the open segment is accounted at the old step."""
         tl = self._cores[core_id]
         if tl.freq == freq:
             return
+        if self._cap_track:
+            self._cap_tick(now)
+            self._watts -= tl.power.power(tl.state, tl.freq)
         tl.close_segment(now)
         tl.freq = freq
+        if self._cap_track:
+            self._watts += tl.power.power(tl.state, freq)
 
     def frequency_of(self, core_id: int) -> float:
         return self._cores[core_id].freq
 
+    def core_ids(self) -> list[int]:
+        return list(self._cores)
+
+    # -- power-cap accounting --------------------------------------------
+
+    def _cap_tick(self, now: float) -> None:
+        """Close the open constant-draw interval; accumulate violation
+        seconds if the draw exceeded the active cap."""
+        dt = now - self._cap_since
+        if dt > 0.0:
+            if self._cap is not None and self._watts > self._cap + 1e-12:
+                self._cap_violation_s += dt
+            self._cap_since = now
+
+    def set_power_cap(self, now: float, watts: float | None) -> None:
+        """Install (or lift, with ``None``) a machine-wide power cap.
+
+        The meter does not *enforce* the cap — policies do, by parking
+        cores or lowering frequencies — it *measures* compliance: every
+        second the aggregate draw sits above the cap is charged to
+        :attr:`cap_violation_s`.  Tracking starts lazily at the first
+        call so cap-free runs pay nothing.
+        """
+        if not self._cap_track:
+            self._cap_track = True
+            self._watts = sum(tl.power.power(tl.state, tl.freq)
+                              for tl in self._cores.values())
+            self._cap_since = now
+        else:
+            self._cap_tick(now)
+        self._cap = watts
+
+    @property
+    def power_cap_w(self) -> float | None:
+        return self._cap
+
+    @property
+    def watts(self) -> float:
+        """Current aggregate draw (only maintained once a cap was set)."""
+        return self._watts
+
+    @property
+    def cap_violation_s(self) -> float:
+        return self._cap_violation_s
+
     def finish(self, now: float) -> None:
+        if self._cap_track:
+            self._cap_tick(now)
         for tl in self._cores.values():
             tl.close_segment(now)
         self._t_end = now

@@ -57,6 +57,12 @@ class EventKind(enum.Enum):
     #: inter-node network transfer on a cross-node dependency edge
     #: (multi-node clusters; data: src, dst, seconds)
     TRANSFER = "transfer"
+    #: machine-condition change applied by the runtime (power cap,
+    #: core fail/recover, thermal throttle, straggler onset); ``data``
+    #: is the :meth:`~repro.core.conditions.Perturbation.to_dict`
+    #: payload, so a recorded perturbed run carries its own timeline
+    #: and replays byte-exactly
+    PERTURBATION = "perturbation"
 
 
 @dataclass(frozen=True, slots=True)

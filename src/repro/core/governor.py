@@ -331,6 +331,11 @@ class GovernorReport:
     transfers: int = 0
     transfer_seconds: float = 0.0
     migrations: int = 0
+    #: seconds the run's aggregate power draw sat above the active
+    #: power cap (0.0 on cap-free runs; ``repr=False`` keeps reports
+    #: from unperturbed runs textually identical to the pre-conditions
+    #: schema)
+    cap_violation_s: float = field(default=0.0, repr=False)
 
 
 # ---------------------------------------------------------------------------
@@ -418,6 +423,13 @@ class ResourceGovernor:
         # Last applied type→step map, replaced wholesale at tick time so
         # the per-task-start frequency_of() read is lock-free.
         self._freq_cache: dict[str, float] = {}
+        # Thermal frequency ceilings per core type (machine conditions);
+        # empty on unperturbed stacks — apply_frequencies() clamps the
+        # predictor's recommendation against these.
+        self._thermal_caps: dict[str, float] = {}
+        #: live machine-condition view (see :meth:`attach_conditions`);
+        #: None on unperturbed stacks
+        self.conditions = None
         if clock is not None:
             ids = (list(worker_ids) if worker_ids is not None
                    else list(range(spec.resources)))
@@ -492,6 +504,73 @@ class ResourceGovernor:
                 and self._clock is not None:
             self.energy.set_frequency(worker_id, q, self._clock())
 
+    # -- machine conditions --------------------------------------------------
+
+    def attach_conditions(self, conditions) -> None:
+        """Install a :class:`~repro.core.conditions.MachineConditions`
+        live view.  The monitor learns which workers are suspected
+        stragglers (their samples skip the α EMAs); thermal and
+        availability changes are pushed by the frontend through
+        :meth:`apply_thermal` / :meth:`set_failed_workers` as the
+        perturbations fire."""
+        self.conditions = conditions
+        if self.monitor is not None and conditions is not None:
+            self.monitor.set_suspect_of(conditions.is_suspect)
+
+    def apply_thermal(self, caps: Mapping[str, float],
+                      now: float | None = None) -> None:
+        """Install thermal frequency ceilings per core type (an empty
+        mapping lifts all throttles) and rebuild the effective DVFS map:
+        for each type, min(predictor's recommended step, thermal cap).
+        On homogeneous stacks (no topology) the tightest cap applies to
+        every worker under the ``""`` key — :meth:`frequency_of`
+        resolves untyped workers through it, and a non-empty map
+        disengages the simulator's flat fast path so throttling bites
+        even on machines with a single nominal step."""
+        self._thermal_caps = dict(caps)
+        if self.energy is None or self._clock is None:
+            return
+        if now is None:
+            now = self._clock()
+        pred = (self.predictor.freq_by_type
+                if self._dvfs and self.predictor is not None else {})
+        eff: dict[str, float] = {}
+        if self.topology is not None:
+            for t in self.topology.types:
+                q = min(pred.get(t.name, 1.0), caps.get(t.name, 1.0))
+                if q != 1.0:
+                    eff[t.name] = q
+            for w, ct in self._type_of_worker.items():
+                self.energy.set_frequency(w, eff.get(ct, 1.0), now)
+        else:
+            q = min(caps.values()) if caps else 1.0
+            if q != 1.0:
+                eff[""] = q
+            for w in self.energy.core_ids():
+                self.energy.set_frequency(w, q, now)
+        self._freq_cache = eff
+
+    def set_failed_workers(self, failed: list[int]) -> None:
+        """Tell the predictor which of this governor's workers are dead
+        so Δ and the hetero plan stop counting them (an empty list
+        restores the all-healthy view)."""
+        if self.predictor is None:
+            return
+        if not failed:
+            self.predictor.set_availability(None)
+            return
+        topo = self.topology
+        if topo is None:
+            n_alive = max(0, self.spec.resources - len(failed))
+            self.predictor.set_availability({"": n_alive})
+            return
+        alive = {t.name: t.count for t in topo.types}
+        for w in failed:
+            ct = self._core_type_of(w)
+            if ct in alive and alive[ct] > 0:
+                alive[ct] -= 1
+        self.predictor.set_availability(alive)
+
     # -- push-style lifecycle (executors: Alg. 2 hooks) ----------------------
 
     def _require_manager(self) -> WorkerManager:
@@ -548,6 +627,11 @@ class ResourceGovernor:
         freqs = self.predictor.freq_by_type
         if not freqs:
             return {}
+        caps = self._thermal_caps
+        if caps:
+            # thermal ceilings win over the predictor's recommendation
+            freqs = {ct: min(q, caps.get(ct, 1.0))
+                     for ct, q in freqs.items()}
         now = self._clock()
         for w, ct in self._type_of_worker.items():
             q = freqs.get(ct)
@@ -655,4 +739,5 @@ class ResourceGovernor:
             transfers=transfers,
             transfer_seconds=transfer_seconds,
             migrations=migrations,
+            cap_violation_s=energy_meter.cap_violation_s,
         )

@@ -163,7 +163,7 @@ class AccuracyReport:
 
 @guarded_by("_types", "_outstanding", "_predicted_at_start",
             "_subscribed_buses", "_direct_buses", "version",
-            "_core_type_of", "_freq_of")
+            "_core_type_of", "_freq_of", "_suspect_of")
 class TaskMonitor:
     """The shared monitoring module (paper Fig. 2, left box)."""
 
@@ -191,6 +191,12 @@ class TaskMonitor:
         # completion events feed the per-(type × core-type) α_{j,c}.
         self._core_type_of: Callable[[int], str] | None = None
         self._freq_of: Callable[[int], float] | None = None
+        # Worker id → "is this core a suspected straggler?"; set by
+        # condition-aware frontends.  Samples from suspect cores are
+        # excluded from the α EMAs — one sick core must not poison the
+        # global cost model (throttled cores need no exclusion: their
+        # dilation is already corrected by the frequency term).
+        self._suspect_of: Callable[[int], bool] | None = None
 
     def set_core_type_of(self, fn: Callable[[int], str] | None,
                          freq_of: Callable[[int], float] | None = None,
@@ -203,6 +209,13 @@ class TaskMonitor:
         with self._lock:
             self._core_type_of = fn
             self._freq_of = freq_of
+
+    def set_suspect_of(self, fn: Callable[[int], bool] | None) -> None:
+        """Teach the monitor which worker ids are suspected stragglers
+        (see :class:`~repro.core.conditions.MachineConditions`); their
+        completion samples skip the α EMAs."""
+        with self._lock:
+            self._suspect_of = fn
 
     # -- event-bus subscription -------------------------------------------
     # The monitor is ONE subscriber on the runtime event bus, not the
@@ -263,11 +276,15 @@ class TaskMonitor:
             freq = (self._freq_of(ev.worker_id)
                     if (self._freq_of is not None
                         and ev.worker_id is not None) else 1.0)
+            suspect = (self._suspect_of(ev.worker_id)
+                       if (self._suspect_of is not None
+                           and ev.worker_id is not None) else False)
             self.on_task_completed(ev.task_id, ev.type_name, ev.cost,
                                    ev.elapsed if ev.elapsed is not None
                                    else 0.0,
                                    parent_id=ev.data.get("parent"),
-                                   core_type=core_type, freq=freq)
+                                   core_type=core_type, freq=freq,
+                                   suspect=suspect)
 
     # -- type helpers ------------------------------------------------------
 
@@ -329,19 +346,40 @@ class TaskMonitor:
                           elapsed: float,
                           parent_id: int | None = None,
                           core_type: str | None = None,
-                          freq: float = 1.0) -> None:
+                          freq: float = 1.0,
+                          suspect: bool = False) -> None:
         """Task finished; fold the measured time into the aggregates.
 
         ``freq`` is the DVFS step the task ran at: the per-core α_{j,c}
         stores the full-speed cost (``elapsed · freq``), keeping the
-        planner's capacity math frequency-independent."""
+        planner's capacity math frequency-independent.  ``suspect``
+        marks a sample from a suspected-straggler core: its timing is
+        excluded from the α EMAs (accuracy accounting stays honest)."""
         with self._lock:
             self._completed_locked(task_id, type_name, cost, elapsed,
-                                   parent_id, core_type, freq)
+                                   parent_id, core_type, freq, suspect)
+
+    def on_task_abort(self, task_id: int, type_name: str,
+                      cost: float) -> None:
+        """An *executing* task was torn off its core (core failure) and
+        requeued: reverse the executing → ready transition so the live
+        workload accounting matches the scheduler's ready queue.  The
+        prediction recorded at the original ready stands — the eventual
+        re-execution completes against it."""
+        with self._lock:
+            self.version += 1
+            m = self._types.get(type_name)
+            if m is None:
+                m = self._metrics(type_name)
+            m.executing_cost -= cost
+            m.executing_instances -= 1
+            m.ready_cost += cost
+            m.ready_instances += 1
 
     def _completed_locked(self, task_id: int, type_name: str, cost: float,
                           elapsed: float, parent_id: int | None,
-                          core_type: str | None, freq: float) -> None:
+                          core_type: str | None, freq: float,
+                          suspect: bool = False) -> None:
         self.version += 1
         m = self._types.get(type_name)
         if m is None:
@@ -349,7 +387,7 @@ class TaskMonitor:
         m.executing_cost -= cost
         m.executing_instances -= 1
         m.completed += 1
-        if elapsed > 0.0 and cost > 0.0:
+        if elapsed > 0.0 and cost > 0.0 and not suspect:
             m.unitary_cost.update(elapsed / cost)
             if core_type is not None:
                 ema = m.per_core.get(core_type)
@@ -393,11 +431,15 @@ class TaskMonitor:
         freq = (self._freq_of(worker_id)
                 if (self._freq_of is not None
                     and worker_id is not None) else 1.0)
+        suspect = (self._suspect_of(worker_id)
+                   if (self._suspect_of is not None
+                       and worker_id is not None) else False)
         with self._lock:
             for t in newly_ready:
                 self._ready_locked(t.task_id, t.type_name, t.cost)
             self._completed_locked(task.task_id, task.type_name, task.cost,
-                                   elapsed, parent_id, core_type, freq)
+                                   elapsed, parent_id, core_type, freq,
+                                   suspect)
 
     def ready_batch(self, tasks) -> None:
         """Fold many just-became-ready tasks in under a *single* lock
@@ -434,6 +476,7 @@ class TaskMonitor:
         with self._lock:
             core_type_of = self._core_type_of
             freq_of = self._freq_of
+            suspect_of = self._suspect_of
             for op in ops:
                 if op[0] == OP_EXECUTE:
                     self._execute_locked(op[1], op[2], op[3])
@@ -447,9 +490,12 @@ class TaskMonitor:
                     freq = (freq_of(worker_id)
                             if (freq_of is not None
                                 and worker_id is not None) else 1.0)
+                    suspect = (suspect_of(worker_id)
+                               if (suspect_of is not None
+                                   and worker_id is not None) else False)
                     self._completed_locked(task.task_id, task.type_name,
                                            task.cost, elapsed, parent_id,
-                                           core_type, freq)
+                                           core_type, freq, suspect)
 
     # -- snapshot for the predictor (Alg. 1 inputs) --------------------------
 

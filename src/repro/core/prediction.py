@@ -102,7 +102,7 @@ class HeteroPlan:
 
 
 @single_writer("_delta", "_plan", "_memo_version", "_memo_valid",
-               "predictions_made")
+               "predictions_made", "_alive_by_type", "_n_alive")
 class CPUPredictor:
     """Computes and caches ``Δ``; thread-safe.
 
@@ -138,6 +138,32 @@ class CPUPredictor:
         # against (-1 ⇒ never computed).
         self._memo_version = -1
         self._memo_valid = False
+        # Core availability under dynamic machine conditions: None ⇒
+        # every core healthy (the pre-conditions fast path — zero
+        # lookups anywhere below).  Set by the governor when cores fail
+        # or recover; dead cores drop out of Δ and the hetero plan.
+        self._alive_by_type: dict[str, int] | None = None
+        self._n_alive: int | None = None
+
+    def set_availability(self, alive_by_type: dict[str, int] | None,
+                         ) -> None:
+        """Install the per-core-type count of *alive* cores (None
+        restores the all-healthy default).  Invalidates the tick memo:
+        the plan is no longer a pure function of the monitor snapshot
+        alone."""
+        self._alive_by_type = (dict(alive_by_type)
+                               if alive_by_type is not None else None)
+        self._n_alive = (sum(alive_by_type.values())
+                         if alive_by_type is not None else None)
+        self._memo_version = -1
+        self._memo_valid = False
+
+    def _alive(self, type_name: str, count: int) -> int:
+        """Alive cores of ``type_name`` (``count`` when unconditioned)."""
+        a = self._alive_by_type
+        if a is None:
+            return count
+        return a.get(type_name, count)
 
     # -- Algorithm 1 ---------------------------------------------------------
 
@@ -148,6 +174,8 @@ class CPUPredictor:
         early-exit bound is the paper's ``while (γ < N_CPUs)``)."""
         cfg = self.config
         n = self.n_cpus if n_cpus is None else n_cpus
+        if self._n_alive is not None and self._n_alive < n:
+            n = max(1, self._n_alive)
         gamma, total_instances = self.monitor.fold_gamma(
             cfg.min_samples, cfg.rate_s, cfg.count_based_only,
             limit=None if cfg.allow_oversubscription else n)
@@ -172,6 +200,10 @@ class CPUPredictor:
         cfg = self.config
         order = topo.fastest_first()
         max_freqs = {t.name: t.max_freq for t in topo.types}
+        # Alive cores per type: identical to the nominal counts unless
+        # set_availability() installed a failure view (then dead cores
+        # vanish from every width/cap below).
+        alive = {t.name: self._alive(t.name, t.count) for t in topo.types}
 
         # 1. Normalize the live workload to unit-speed seconds (γ's
         #    numerator) + the count-based fallback instance pool.
@@ -203,10 +235,18 @@ class CPUPredictor:
                 continue
             demand += (snap.live_cost * alpha_u) / cfg.rate_s
 
+        # fastest type that still has an alive core (order[0] when all
+        # healthy — bit-identical to the pre-conditions choice)
+        fastest_alive = order[0].name
+        for ct in order:
+            if alive[ct.name] > 0:
+                fastest_alive = ct.name
+                break
+
         if total_instances == 0:
-            # keep one (fastest) core awake to pick up new work
-            fastest = order[0].name
-            return HeteroPlan(delta=1, by_type={fastest: 1}, freq=max_freqs)
+            # keep one (fastest alive) core awake to pick up new work
+            return HeteroPlan(delta=1, by_type={fastest_alive: 1},
+                              freq=max_freqs)
 
         # 2. Fill fastest cores first: fractional per-type allocation for
         #    the timed demand, then one core per count-fallback instance.
@@ -216,13 +256,14 @@ class CPUPredictor:
         fb = float(fallback)
         for ct in order:
             cap_per_core = ct.speed * ct.max_freq
+            n_c = alive[ct.name]
             x = 0.0
             if remaining > 1e-12:
-                x = min(float(ct.count), remaining / cap_per_core)
+                x = min(float(n_c), remaining / cap_per_core)
                 remaining -= x * cap_per_core
             timed_frac[ct.name] = x
-            if x < ct.count and fb > 0:
-                y = min(ct.count - x, fb)
+            if x < n_c and fb > 0:
+                y = min(n_c - x, fb)
                 x += y
                 fb -= y
             frac[ct.name] = x
@@ -245,14 +286,16 @@ class CPUPredictor:
             # plain ceil, exactly like the homogeneous ⌈γ⌉ (parity)
             take = max(0, math.ceil(cum) - alloc_total)
             if not cfg.allow_oversubscription:
-                take = min(take, ct.count)
+                take = min(take, alive[ct.name])
             by_type[ct.name] = take
             alloc_total += take
 
         # 4. Caps (mirrors the homogeneous path): live instances, owned
         #    cores / oversubscription budget, and Δ ≥ 1.
+        n_owned = (self._n_alive if self._n_alive is not None
+                   else self.n_cpus)
         cap = (int(cfg.oversubscription_cap * self.n_cpus)
-               if cfg.allow_oversubscription else self.n_cpus)
+               if cfg.allow_oversubscription else max(1, n_owned))
         target = max(1, min(alloc_total, total_instances, cap))
         # trim surplus from the slowest allocated types first
         for ct in reversed(order):
@@ -262,7 +305,7 @@ class CPUPredictor:
             by_type[ct.name] -= give
             alloc_total -= give
         if alloc_total < target:   # all-zero after caps: wake the fastest
-            by_type[order[0].name] += target - alloc_total
+            by_type[fastest_alive] += target - alloc_total
             alloc_total = target
 
         # 4b. Fast-core reserve (speed-asymmetric topologies only): keep
@@ -277,11 +320,12 @@ class CPUPredictor:
         #     never — exact homogeneous parity.)
         reserved: str | None = None
         fastest = order[0]
-        if fastest.speed > min(t.speed for t in topo.types):
+        if (fastest.speed > min(t.speed for t in topo.types)
+                and alive[fastest.name] > 0):
             reserved = fastest.name
-            boost = fastest.count - by_type[fastest.name]
+            boost = alive[fastest.name] - by_type[fastest.name]
             if boost > 0:
-                by_type[fastest.name] = fastest.count
+                by_type[fastest.name] = alive[fastest.name]
                 alloc_total += boost
 
         # 5. Frequency recommendation per type — stretch-to-fit: running
@@ -305,7 +349,7 @@ class CPUPredictor:
                 continue
             # demand on this type, in cores-at-max-step
             demand_c = timed_frac[ct.name] * ct.max_freq
-            max_width = min(ct.count, granted + budget)
+            max_width = min(alive[ct.name], granted + budget)
             pm = ct.power or PowerModel()
             best_q = ct.max_freq
             best_width = granted

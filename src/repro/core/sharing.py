@@ -71,7 +71,7 @@ class _JobAccount:
 
 
 @guarded_by("_jobs", "_pool", "_owner", "_holder", "_return_flags",
-            "total_calls")
+            "total_calls", "_failed")
 class ResourceBroker:
     """The DLB stand-in: a pool of lent CPUs shared between jobs.
 
@@ -91,6 +91,10 @@ class ResourceBroker:
         self._type_of = core_type_of
         self._serve_stamp = itertools.count(1)
         self.total_calls = 0
+        # Failed cores (machine conditions): a dict used as an ordered
+        # set — failed CPUs are pulled from the pool, refused by lend/
+        # acquire, and their loan accounting erased until recovery.
+        self._failed: dict[int, bool] = {}
 
     # -- registration --------------------------------------------------------
 
@@ -168,6 +172,51 @@ class ResourceBroker:
                 out[ct] = out.get(ct, 0) + 1
             return out
 
+    # -- machine conditions ----------------------------------------------------
+
+    def fail_core(self, cpu: int) -> str:
+        """``cpu`` died: pull it from the pool, erase any loan
+        accounting, and refuse to lend/grant it until
+        :meth:`recover_core`.  Returns the job that was holding it
+        (``""`` if it sat in the pool) so the caller can tear down the
+        right worker.  Shared-memory bookkeeping, not a DLB call —
+        hardware does not bill you for breaking."""
+        with self._lock:
+            self._failed[cpu] = True
+            owner = self._owner.get(cpu)
+            if owner is None:
+                return ""
+            held_by = self._holder.get(cpu, owner)
+            if cpu in self._pool:
+                self._pool.remove(cpu)
+            owner_acct = self._jobs[owner]
+            owner_acct.lent.discard(cpu)
+            self._return_flags.discard(cpu)
+            owner_acct.reclaim_wanted = bool(
+                self._return_flags & owner_acct.lent)
+            if held_by and held_by != owner:
+                self._jobs[held_by].borrowed.discard(cpu)
+            # Park the dead core on its owner's books so recovery
+            # restores the pre-failure ownership layout.
+            self._holder[cpu] = owner
+            return held_by
+
+    def recover_core(self, cpu: int) -> str:
+        """A failed ``cpu`` came back; it rejoins its owner directly
+        (never through the pool — the owner decides whether to lend
+        it).  Returns the owning job name (``""`` if unregistered)."""
+        with self._lock:
+            self._failed.pop(cpu, None)
+            owner = self._owner.get(cpu)
+            if owner is None:
+                return ""
+            self._holder[cpu] = owner
+            return owner
+
+    def is_failed(self, cpu: int) -> bool:
+        with self._lock:
+            return cpu in self._failed
+
     # -- the three DLB verbs ---------------------------------------------------
 
     def lend(self, job: str, cpu: int) -> str:
@@ -175,8 +224,12 @@ class ResourceBroker:
 
         Returns the new holder: the owner's name when a reclaim was
         pending (direct hand-over), else ``""`` (parked in the pool).
+        A failed CPU is refused outright (uncounted — the call would
+        never reach the library on dead silicon).
         """
         with self._lock:
+            if self._failed and cpu in self._failed:
+                return ""
             acct = self._jobs[job]
             acct.calls += 1
             self.total_calls += 1
@@ -246,6 +299,8 @@ class ResourceBroker:
             own: list[int] = []
             foreign: list[int] = []
             for c in self._pool:
+                if self._failed and c in self._failed:
+                    continue   # defensive: fail_core() drains the pool
                 if core_type is not None and self._ct(c) != core_type:
                     continue
                 if self._owner[c] == job:

@@ -89,6 +89,31 @@ class MachineModel:
 
     def service_time(self, base: float, core: int | None = None,
                      freq: float = 1.0) -> float:
+        """Wall seconds for ``base`` reference-seconds of work on
+        ``core`` at DVFS step ``freq``.
+
+        Contract: ``freq`` is validated against the core type's DVFS
+        steps instead of silently extrapolating.  Above the type's top
+        step it clamps to ``max_freq`` (requesting a frequency the
+        silicon lacks runs at the fastest it has); nonpositive values
+        clamp to the *lowest* step (a frequency of zero would stall the
+        task forever).  Frequencies inside ``(0, max_freq]`` are
+        honored bit-identically even when they sit between or below the
+        published steps — thermal throttling legitimately pins a core
+        under its slowest nominal step.
+        """
+        if freq > 1.0 or freq <= 0.0:
+            # Every CoreType validates its steps inside (0, 1], so
+            # in-band requests (the overwhelmingly common case) skip
+            # the typed lookup entirely.
+            ct = self._topology.core_type_at(core if core is not None
+                                            else 0)
+            freq = ct.max_freq if freq > 1.0 else ct.freq_steps[0]
+        elif freq != 1.0 and core is not None \
+                and self.core_types is not None:
+            mf = self._topology.core_type_at(core).max_freq
+            if freq > mf:
+                freq = mf
         return base / (self.speed_of(core) * freq)
 
     # -- serialization (ClusterModel round-trip) ----------------------------

@@ -186,6 +186,25 @@ class Scheduler:
                 newly_ready)
         return newly_ready
 
+    def requeue(self, task: Task) -> None:
+        """Put an *executing* task back at the head of the ready queue —
+        the core running it died (machine conditions).  The inverse of
+        :meth:`poll`: ready count grows, the monitor reverses its
+        executing → ready accounting, and a fresh ``TASK_READY`` is
+        published so recorded traces show the re-queue (the later
+        re-execution publishes its own EXECUTE/COMPLETED pair)."""
+        with self._lock:
+            self._ready.appendleft(task)
+            self._ready_count += 1
+        self._requeue_tail(task)
+
+    def _requeue_tail(self, task: Task) -> None:  # analysis: caller-locks
+        monitor = self.monitor
+        if monitor is not None:
+            monitor.on_task_abort(task.task_id, task.type_name, task.cost)
+        if self.bus.interest != _QUIET:
+            self._publish(EventKind.TASK_READY, task)
+
     # -- state ---------------------------------------------------------------
 
     @property
@@ -273,6 +292,13 @@ class _SeqScheduler(Scheduler):
             self._publish(EventKind.TASK_COMPLETED, task,
                           worker_id=worker_id, elapsed=elapsed)
         return newly_ready
+
+    def requeue(self, task: Task) -> None:
+        if __debug__:
+            self._assert_owner()
+        self._ready.appendleft(task)
+        self._ready_count += 1
+        self._requeue_tail(task)
 
     @property
     def ready_count(self) -> int:

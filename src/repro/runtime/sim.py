@@ -34,6 +34,8 @@ from dataclasses import dataclass, replace
 from typing import Any
 
 from ..core.arbiter import AppPlan, ClusterArbiter
+from ..core.conditions import (ConditionTimeline, MachineConditions,
+                               Perturbation, PerturbationKind)
 from ..core.energy import PowerModel
 from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.governor import (DEFAULT_MIN_SAMPLES, GovernorReport,
@@ -55,7 +57,10 @@ __all__ = ["SimJobSpec", "SimReport", "SimCluster", "SimExecutor"]
 SimReport = GovernorReport
 
 # Event kinds (sorted lexically only via seq tiebreak; kind order irrelevant)
-_FINISH, _TICK, _RESUME, _SPIN_EXPIRE, _ARRIVE = range(5)
+# _FAULT/_THROTTLE/_POWER fire machine-condition perturbations (fail /
+# recover / straggle, thermal caps, power caps) from a ConditionTimeline.
+(_FINISH, _TICK, _RESUME, _SPIN_EXPIRE, _ARRIVE,
+ _FAULT, _THROTTLE, _POWER) = range(8)
 
 _heappush = heapq.heappush
 
@@ -116,7 +121,7 @@ class _SimJob:
         "manager", "sharing", "rate_s", "epoch", "waking", "borrowed",
         "t_done", "monitor_events", "arrivals_pending", "spin_budget",
         "home", "mm", "socket_penalty", "transfers", "transfer_seconds",
-        "migrations", "pending_moves")
+        "migrations", "pending_moves", "running", "failed")
 
     def __init__(self, cluster: "SimCluster", spec: SimJobSpec,
                  cpus: list[int]) -> None:
@@ -223,6 +228,12 @@ class _SimJob:
         #: cores granted to an in-flight migration while EXECUTING; they
         #: move (old → new global id) at their next task boundary
         self.pending_moves: dict[int, int] | None = None
+        #: machine conditions only (both stay empty otherwise): the task
+        #: each core is executing (so a CORE_FAIL can re-queue it) and
+        #: this job's currently failed owned cores (dict, not set — the
+        #: determinism lint forbids set iteration)
+        self.running: dict[int, Task] = {}
+        self.failed: dict[int, bool] = {}
 
     @property
     def done(self) -> bool:
@@ -250,7 +261,8 @@ class SimCluster:
 
     def __init__(self, machine: MachineModel | ClusterModel,
                  broker: ResourceBroker | None = None,
-                 threadsafe: bool = False) -> None:
+                 threadsafe: bool = False,
+                 conditions: ConditionTimeline | None = None) -> None:
         if isinstance(machine, ClusterModel):
             #: the locality hierarchy; a 1-node cluster takes the flat
             #: single-machine paths end to end (byte parity with the
@@ -284,6 +296,21 @@ class SimCluster:
                         broker.set_core_type_of(machine.topology().type_of)
                     topo = machine.topology()
                 self.arbiter = ClusterArbiter(broker, topology=topo)
+        #: machine-condition timeline + live view.  An EMPTY (or absent)
+        #: timeline leaves both None: every conditions gate below stays
+        #: closed and the run is byte-identical to the pre-conditions
+        #: simulator.
+        self.timeline = conditions if conditions else None
+        self._cond: MachineConditions | None = (
+            MachineConditions(conditions) if conditions else None)
+        #: machine-wide power-cap compliance: per-job meters can only
+        #: judge their *own* draw against the cap, so a 48 W machine
+        #: split between two 24 W tenants would look compliant per
+        #: meter.  The drain loop integrates the summed draw across all
+        #: jobs against the active cap at every virtual-time advance
+        #: (piecewise-constant between events, so this is exact).
+        self._machine_cap: float | None = None
+        self.machine_cap_violation_s = 0.0
         self.now = 0.0
         #: per-task fast path: homogeneous machines divide service times
         #: by one constant (None on machines with typed cores and on
@@ -317,6 +344,8 @@ class SimCluster:
                 base = sum(len(j.cpus) for j in self.jobs.values())
                 cpus = list(range(base, base + self.machine.n_cores))
         job = _SimJob(self, spec, list(cpus))
+        if self._cond is not None:
+            job.governor.attach_conditions(self._cond)
         self.jobs[spec.name] = job
         if self.broker is not None:
             self.broker.register_job(spec.name, list(job.cpus))
@@ -331,6 +360,17 @@ class SimCluster:
     # -- main loop --------------------------------------------------------------
 
     def run(self, max_events: int = 50_000_000) -> dict[str, SimReport]:
+        if self.timeline is not None:
+            # Perturbations are scheduled before the t=0 submissions so
+            # a time-0 condition is in force before any task starts.
+            for p in self.timeline:
+                k = p.kind
+                if k is PerturbationKind.POWER_CAP:
+                    self._push(p.time, _POWER, p)
+                elif k is PerturbationKind.THERMAL_THROTTLE:
+                    self._push(p.time, _THROTTLE, p)
+                else:
+                    self._push(p.time, _FAULT, p)
         for job in self.jobs.values():
             self._submit_or_schedule(job)
         for job in self.jobs.values():
@@ -353,11 +393,28 @@ class SimCluster:
         on_resume = self._on_resume
         on_spin_expire = self._on_spin_expire
         on_arrive = self._on_arrive
+        on_fault = self._on_fault
+        on_throttle = self._on_throttle
+        on_power = self._on_power
+        cond_on = self._cond is not None
+        cond_jobs = list(self.jobs.values())
         while heap and self._undone:
             events += 1
             if events > max_events:
                 raise RuntimeError("simulator exceeded max_events")
             t, _, kind, a, b, c, d = pop(heap)
+            if cond_on:
+                cap = self._machine_cap
+                if cap is not None and t > self.now:
+                    # completed jobs are excluded: their runtime has
+                    # exited, and their meters froze at the final
+                    # (possibly all-spinning) draw
+                    watts = 0.0
+                    for j in cond_jobs:
+                        if j.t_done is None:
+                            watts += j.energy.watts
+                    if watts > cap + 1e-12:
+                        self.machine_cap_violation_s += t - self.now
             self.now = t
             if kind == _FINISH:
                 on_finish(a, b, c, d)
@@ -367,8 +424,14 @@ class SimCluster:
                 on_tick(a)
             elif kind == _SPIN_EXPIRE:
                 on_spin_expire(a, b, c)
-            else:
+            elif kind == _ARRIVE:
                 on_arrive(a, b)
+            elif kind == _FAULT:
+                on_fault(a)
+            elif kind == _THROTTLE:
+                on_throttle(a)
+            else:
+                on_power(a)
         self.events_processed = events
         reports = {}
         for job in self.jobs.values():
@@ -430,6 +493,15 @@ class SimCluster:
 
     def _on_finish(self, job: _SimJob, cpu: int, task: Task,
                    elapsed: float) -> None:
+        if self._cond is not None:
+            # Under machine conditions the d slot carries (dur, epoch):
+            # a CORE_FAIL mid-task bumped the core's epoch when it
+            # re-queued the task, so the dead core's in-flight finish
+            # pops here as stale and is dropped.
+            elapsed, ep = elapsed
+            if job.epoch.get(cpu) != ep:
+                return
+            job.running.pop(cpu, None)
         # successors consult this for cross-node transfer / cross-socket
         # penalty on the dependency edge; stamp before any dispatch
         task.completed_on = cpu
@@ -557,6 +629,132 @@ class SimCluster:
         if decision is PollDecision.LEND:
             self._lend(job, cpu)
 
+    # -- machine-condition handlers -----------------------------------------------
+
+    def _publish_perturbation(self, p: Perturbation) -> None:
+        """Record the perturbation as a runtime event (once per distinct
+        bus — jobs sharing an external bus must not duplicate it) so
+        traces of perturbed runs round-trip through the replayer."""
+        seen: dict[int, bool] = {}
+        for job in self.jobs.values():
+            bus = job.bus
+            if id(bus) in seen:
+                continue
+            seen[id(bus)] = True
+            if bus.interested(EventKind.PERTURBATION):
+                bus.publish(RuntimeEvent(
+                    kind=EventKind.PERTURBATION, time=self.now,
+                    data=p.to_dict()))
+
+    def _owner_of(self, cpu: int) -> _SimJob | None:
+        for job in self.jobs.values():
+            if cpu in job.cpus:
+                return job
+        return None
+
+    def _note_failed(self, job: _SimJob, cpu: int, failed: bool) -> None:
+        if failed:
+            job.failed[cpu] = True
+        else:
+            job.failed.pop(cpu, None)
+        job.governor.set_failed_workers(list(job.failed))
+
+    def _on_fault(self, p: Perturbation) -> None:
+        cond = self._cond
+        assert cond is not None
+        cond.apply(p)
+        self._publish_perturbation(p)
+        if p.kind is PerturbationKind.STRAGGLER:
+            # nothing structural: _start dilates subsequent durations on
+            # the slow core and the monitor skips its suspect samples
+            return
+        c = p.core
+        assert c is not None
+        if p.kind is PerturbationKind.CORE_FAIL:
+            # Whoever currently holds the core live (owner or borrower)
+            # loses it; an in-flight task is re-queued at the head of
+            # the ready queue and re-executed on a surviving core.
+            holder = None
+            for job in self.jobs.values():
+                st = job.manager.state_of(c)
+                if st is not None and st is not WorkerState.LENT:
+                    holder = job
+                    break
+            if holder is not None:
+                task = holder.running.pop(c, None)
+                holder.epoch[c] = holder.epoch.get(c, 0) + 1
+                holder.waking.discard(c)
+                # closes the core's energy timeline (OFF) from any state
+                holder.manager.remove_worker(c)
+                holder.borrowed.discard(c)
+                if task is not None:
+                    holder.scheduler.requeue(task)
+            if self.broker is not None:
+                self.broker.fail_core(c)
+            owner = self._owner_of(c)
+            if owner is not None:
+                if (owner is not holder
+                        and owner.manager.state_of(c) is not None):
+                    # the owner kept a LENT registration for a core that
+                    # was borrowed out — retire it too
+                    owner.epoch[c] = owner.epoch.get(c, 0) + 1
+                    owner.manager.remove_worker(c)
+                self._note_failed(owner, c, True)
+            if holder is not None and holder.scheduler.ready_count > 0:
+                self._work_added(holder)
+        else:  # CORE_RECOVER
+            if self.broker is not None:
+                self.broker.recover_core(c)
+            owner = self._owner_of(c)
+            if owner is None:
+                return
+            self._note_failed(owner, c, False)
+            if owner.t_done is not None:
+                return  # job already finished; nothing to resume
+            # re-adopt under its true identity (type-correct α/energy),
+            # waking after the usual resume latency
+            if not self._multi:
+                ct = (self.machine.topology().core_type_at(c)
+                      if self.machine.core_types is not None else None)
+            else:
+                cm = self.cluster_model
+                assert cm is not None
+                src = cm.node_of(c)
+                ct = cm.nodes[src].topology().core_type_at(
+                    c - cm.base_of(src))
+            owner.governor.adopt_worker(c, core_type=ct)
+            owner.epoch[c] = owner.epoch.get(c, 0) + 1
+            owner.waking.add(c)
+            self._push(self.now + owner.mm.resume_latency, _RESUME,
+                       owner, c)
+
+    def _on_throttle(self, p: Perturbation) -> None:
+        cond = self._cond
+        assert cond is not None
+        cond.apply(p)
+        self._publish_perturbation(p)
+        caps = cond.thermal_caps()
+        for job in self.jobs.values():
+            job.governor.apply_thermal(caps, now=self.now)
+
+    def _on_power(self, p: Perturbation) -> None:
+        cond = self._cond
+        assert cond is not None
+        cond.apply(p)
+        self._publish_perturbation(p)
+        self._machine_cap = p.watts
+        for job in self.jobs.values():
+            job.energy.set_power_cap(self.now, p.watts)
+        if self.arbiter is not None:
+            jobs = self.jobs
+            active_w = max(j.energy.power_model.active
+                           for j in jobs.values())
+            self.arbiter.set_power_cap(
+                p.watts,
+                current_watts=lambda: sum(j.energy.watts
+                                          for j in jobs.values()),
+                core_active_w=active_w)
+
     # -- mechanics ----------------------------------------------------------------
 
     def _poll(self, job: _SimJob, cpu: int) -> None:
@@ -651,10 +849,27 @@ class SimCluster:
                         task_id=task.task_id, worker_id=cpu,
                         elapsed=xfer,
                         data={"src": src, "dst": node}))
-            self._push(self.now + xfer + dur, _FINISH, job, cpu, task, dur)
+            cond = self._cond
+            if cond is not None:
+                dur *= cond.slowdown_of(cpu)
+                job.running[cpu] = task
+                self._push(self.now + xfer + dur, _FINISH, job, cpu, task,
+                           (dur, job.epoch[cpu]))
+            else:
+                self._push(self.now + xfer + dur, _FINISH, job, cpu, task,
+                           dur)
             return
         if job.monitor is not None:
             dur += 3 * self.machine.monitor_event_overhead
+        cond = self._cond
+        if cond is not None:
+            # straggling cores silently dilate the task; the monitor
+            # marks their samples suspect so α stays clean
+            dur *= cond.slowdown_of(cpu)
+            job.running[cpu] = task
+            self._push(self.now + dur, _FINISH, job, cpu, task,
+                       (dur, job.epoch[cpu]))
+            return
         self._push(self.now + dur, _FINISH, job, cpu, task, dur)
 
     def _dispatch(self, job: _SimJob) -> None:
@@ -870,9 +1085,11 @@ class SimExecutor:
                  power: PowerModel | None = None,
                  spec: GovernorSpec | None = None,
                  bus: EventBus | None = None,
-                 threadsafe: bool = False) -> None:
+                 threadsafe: bool = False,
+                 conditions: ConditionTimeline | None = None) -> None:
         self.machine = machine
         self.threadsafe = threadsafe
+        self.conditions = conditions
         self.last_events_processed = 0
         self.bus = bus if bus is not None else EventBus()
         if spec is not None:
@@ -893,7 +1110,8 @@ class SimExecutor:
         spec = replace(self.spec, graph=graph,
                        arrivals=(arrivals if arrivals is not None
                                  else self.spec.arrivals))
-        cluster = SimCluster(self.machine, threadsafe=self.threadsafe)
+        cluster = SimCluster(self.machine, threadsafe=self.threadsafe,
+                             conditions=self.conditions)
         cluster.add_job(spec)
         try:
             return cluster.run()[spec.name]

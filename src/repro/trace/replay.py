@@ -24,6 +24,7 @@ from dataclasses import replace
 from pathlib import Path
 from typing import Iterable
 
+from ..core.conditions import ConditionTimeline
 from ..core.events import EventKind, RuntimeEvent
 from ..core.governor import GovernorReport, GovernorSpec
 from ..runtime.cluster import ClusterModel
@@ -79,6 +80,18 @@ class TraceReplayer:
             raise KeyError(
                 f"no events for app {app!r}; trace contains {self.apps()}")
         return TraceReplayer(events)
+
+    # -- machine conditions ------------------------------------------------
+
+    def conditions(self) -> ConditionTimeline | None:
+        """The machine-condition timeline recorded in the trace
+        (``PERTURBATION`` events carry ``Perturbation.to_dict()``
+        payloads), or ``None`` for an unperturbed run."""
+        rows = [ev.data for ev in self.events
+                if ev.kind is EventKind.PERTURBATION]
+        if not rows:
+            return None
+        return ConditionTimeline.from_dicts(rows)
 
     # -- graph reconstruction ----------------------------------------------
 
@@ -211,6 +224,13 @@ class TraceReplayer:
         replay onto a multi-node cluster.  Pass ``bus`` (an
         :class:`~repro.core.events.EventBus`) to observe or re-record
         the replay.
+
+        A perturbed trace replays under the *neutralized* form of its
+        recorded :meth:`conditions`: structural perturbations (power
+        caps, fail/recover) are re-applied verbatim — they drive the
+        same scheduling decisions — while speed-changing ones
+        (straggler slowdowns, thermal caps) are disarmed, because the
+        recorded durations already include their dilation.
         """
         from ..runtime.sim import SimCluster, SimJobSpec
 
@@ -222,7 +242,10 @@ class TraceReplayer:
                                    core_speed=1.0,
                                    monitor_event_overhead=0.0)
         graph, _ = self.build()
-        cluster = SimCluster(machine)
+        tl = self.conditions()
+        cluster = SimCluster(
+            machine,
+            conditions=tl.neutralized() if tl is not None else None)
         job = SimJobSpec(name="replay", graph=graph, governor=spec,
                          cpus=list(range(spec.resources)), bus=bus)
         cluster.add_job(job)

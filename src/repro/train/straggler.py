@@ -53,6 +53,13 @@ class StragglerMonitor:
             return False
         return e.value > self.threshold * med
 
+    def mark(self, worker: int) -> None:
+        """Externally flag a worker (e.g. a machine-conditions
+        ``STRAGGLER`` perturbation observed by the runtime): drained
+        immediately, re-admitted through the usual cooldown."""
+        self.drained.add(worker)
+        self._cool[worker] = 0
+
     def sweep(self) -> set[int]:
         """Flag-and-drain pass; returns newly drained workers."""
         new = set()

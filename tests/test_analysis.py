@@ -83,6 +83,8 @@ class TestDeterminismScope:
         assert not determinism_scope(
             Path("src/repro/runtime/thread_executor.py"))
         assert not determinism_scope(Path("src/repro/core/governor.py"))
+        # the machine-conditions timeline feeds the simulator/trace
+        assert determinism_scope(Path("src/repro/core/conditions.py"))
 
     def test_sim_stem_matches_anywhere(self, tmp_path):
         assert determinism_scope(tmp_path / "my_simulator.py")

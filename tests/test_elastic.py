@@ -1,7 +1,11 @@
-"""Elastic controller + straggler mitigation."""
+"""Elastic controller + straggler mitigation + fault-tolerant training."""
 
+import numpy as np
 from _hypothesis_compat import given, settings, st
 
+from repro.checkpoint import CheckpointManager
+from repro.core.conditions import (ConditionTimeline, core_fail,
+                                   core_recover, straggler)
 from repro.train.elastic import ElasticController, ReplicaSet
 from repro.train.straggler import StragglerMonitor
 
@@ -60,6 +64,89 @@ class TestElasticController:
                               policy="busy")
         self._seed(c)
         assert len(c.resize_to_prediction(0).replicas) == 6
+
+
+class TestFaultTolerantTraining:
+    """CORE_FAIL mid-run → checkpoint-restore → completion with the
+    surviving replicas (the dormant straggler/checkpoint hooks wired
+    into the controller)."""
+
+    def _run(self, c: ElasticController, timeline: ConditionTimeline,
+             steps: int = 10, every: int = 2):
+        state = {"w": np.zeros(4, dtype=np.float64)}
+        fired = {p.time: p for p in timeline}
+        step = 0
+        while step < steps:
+            state = {"w": state["w"] + 1.0}
+            step += 1
+            c.on_batches_queued(1, tokens_per_batch=1000.0)
+            c.on_step_done(c._task_seq, 1000.0, 0.1,
+                           replica=c.set.replicas[0])
+            c.maybe_checkpoint(step, state, every=every)
+            p = fired.pop(float(step), None)
+            if p is not None:
+                _, state, step = c.apply_perturbation(p, step, state)
+        return state, step
+
+    def test_core_fail_restores_and_completes(self, tmp_path):
+        c = ElasticController(max_replicas=4, global_batch=32,
+                              checkpoint=CheckpointManager(tmp_path))
+        tl = ConditionTimeline([core_fail(5.0, 2)])
+        state, step = self._run(c, tl, steps=10, every=2)
+        # rolled back from the failure at step 5 to the step-4 save...
+        assert c.restores == [(5, 4)]
+        # ...and completed the full run on the survivors
+        assert step == 10
+        assert float(state["w"][0]) == 10.0
+        assert 2 not in c.set.replicas
+        assert len(c.set.replicas) == 3
+        assert sum(c.set.shards().values()) == 32
+
+    def test_core_fail_without_checkpoint_keeps_live_state(self, tmp_path):
+        c = ElasticController(max_replicas=4, global_batch=32)
+        tl = ConditionTimeline([core_fail(5.0, 1)])
+        state, step = self._run(c, tl, steps=8)
+        assert c.restores == []          # nothing to roll back to
+        assert float(state["w"][0]) == 8.0
+        assert 1 not in c.set.replicas
+
+    def test_recover_rejoins_candidate_pool(self, tmp_path):
+        c = ElasticController(max_replicas=4, global_batch=32, rate_s=0.1,
+                              checkpoint=CheckpointManager(tmp_path))
+        tl = ConditionTimeline([core_fail(3.0, 2), core_recover(6.0, 2)])
+        self._run(c, tl, steps=8)
+        assert 2 not in c.failed          # recovered
+        # backlog-driven growth may now re-admit it
+        c.on_batches_queued(16, tokens_per_batch=1000.0)
+        rs = c.resize_to_prediction(step=9)
+        assert len(rs.replicas) == 4
+
+    def test_straggler_perturbation_drains_replica(self):
+        c = ElasticController(max_replicas=4, global_batch=32,
+                              straggler=StragglerMonitor())
+        p = straggler(2.0, 3, 4.0)
+        rs, _, _ = c.apply_perturbation(p, step=2, state=None)
+        assert 3 not in rs.replicas
+        assert 3 in c.straggler.drained
+        # not a permanent failure: grows may re-admit after cooldown
+        assert 3 not in c.failed
+
+    def test_sweep_drains_observed_straggler(self):
+        c = ElasticController(max_replicas=8, global_batch=64,
+                              straggler=StragglerMonitor(threshold=1.5))
+        for _ in range(6):
+            for r in range(7):
+                c.straggler.observe(r, 0.10)
+            c.straggler.observe(7, 0.40)
+        rs = c.sweep_stragglers(step=6)
+        assert 7 not in rs.replicas
+        assert len(rs.replicas) == 7
+        # drained replicas are skipped by prediction-driven growth
+        c.on_batches_queued(16, tokens_per_batch=1000.0)
+        for i in range(6):
+            c.on_step_done(c._task_seq - i, 1000.0, 0.1)
+        rs = c.resize_to_prediction(step=7)
+        assert 7 not in rs.replicas
 
 
 class TestStraggler:
