@@ -1,67 +1,131 @@
-"""Beyond-paper: prediction-based autoscaling for LM serving.
+"""Serving under overload — SLO attainment, tail latency and energy at
+10⁵-request scale.
 
-A bursty arrival trace drives the continuous-batching engine (real tiny
-model); the AutoScaler's Δ trace is compared across policies, and a
-replica-energy proxy (active replicas integrated over ticks) yields the
-EDP-style trade-off — the paper's Fig. 4 story at serving granularity.
+The discrete-event :class:`~repro.serving.simserving.SimServing`
+frontend drives the full robustness surface in virtual time: admission
+control, deadline shedding, seeded retries, hedged tails, circuit
+breakers, power-cap brownout — 10⁵ requests per scenario in seconds of
+wall clock.
+
+Three arrival shapes × two machines, each under four stacks:
+
+* **poisson** — steady open load at ~75 % of capacity;
+* **burst** — on/off bursts at ~2× capacity with idle gaps;
+* **diurnal** — the headline: a sinusoidal ramp whose peak overshoots
+  capacity, with a facility power cap landing mid-run and lifting
+  later.  The protected prediction stack sheds what cannot meet its
+  deadline, brownouts best-effort traffic, shrinks the hot-replica
+  allowance to the cap (zero violation seconds) — and still beats the
+  unprotected reactive baseline on p99, attainment and aggregate EDP.
+
+Stacks: ``policy`` × ``protection`` — ``prediction+protect`` (the
+paper's stack), ``idle+protect``, ``prediction`` bare, and ``idle``
+bare (the unprotected reactive baseline).  SLO timeouts/retries are the
+client's contract and stay on everywhere.
+
+Headline artifact: ``BENCH_serving.json`` (``python -m benchmarks.run
+--only serving``).
 """
 
 from __future__ import annotations
 
 import time
 
-import jax
-import numpy as np
-
-from repro.configs import get_smoke_config
-from repro.models import init_params
-from repro.serving import AutoScaler, Request, ServingEngine
+from repro.core.conditions import ConditionTimeline, power_cap
+from repro.runtime import HYBRID_PE, MN4
+from repro.serving import ServingModel, SimServing, build_requests
+from repro.workloads.arrivals import (ArrivalProcess, BurstArrivals,
+                                      DiurnalArrivals, PoissonArrivals)
 
 from .common import emit
 
+#: (policy, protection) stacks; protection=False disables admission,
+#: hedging, breakers and cap enforcement — the reactive baseline
+STACKS = (("prediction", True), ("idle", True),
+          ("prediction", False), ("idle", False))
+
+#: per-machine scenario constants: sustainable capacity in requests/s
+#: (slots / mean service seconds at the default token mix) and the
+#: mid-run facility cap in watts (MN4: 48×(1.0 active, 0.1 idle) ⇒
+#: 28 hot replicas; HYBRID-PE: 8 P + 16 E ⇒ 17 hot replicas)
+CAPACITY = {MN4.name: 395.0, HYBRID_PE.name: 138.0}
+CAP_W = {MN4.name: 30.0, HYBRID_PE.name: 12.0}
+
+
+def _arrivals(scenario: str, machine, n: int,
+              seed: int) -> tuple[ArrivalProcess, ConditionTimeline]:
+    cap = CAPACITY[machine.name]
+    if scenario == "poisson":
+        return PoissonArrivals(rate=0.75 * cap, seed=seed), \
+            ConditionTimeline()
+    if scenario == "burst":
+        # bursts at 2× capacity, then a gap about as long as the burst:
+        # mean load ~65 % of capacity, front-loaded
+        burst = max(50, n // 40)
+        return BurstArrivals(burst_size=burst, spacing=1.0 / (2.0 * cap),
+                             gap=burst / (2.0 * cap), seed=seed,
+                             jitter=0.2), ConditionTimeline()
+    if scenario == "diurnal":
+        # sinusoidal ramp whose peak overshoots capacity by 60 %; a
+        # power cap lands during the first peak and lifts on the
+        # second climb
+        low, high = 0.25 * cap, 1.60 * cap
+        mean = (low + high) / 2.0
+        span = n / mean                  # expected run length
+        period = span / 2.0             # two day/night cycles
+        tl = ConditionTimeline([
+            power_cap(0.35 * span, CAP_W[machine.name]),
+            power_cap(0.70 * span, None),
+        ])
+        return DiurnalArrivals(period=period, low_rate=low,
+                               high_rate=high, seed=seed), tl
+    raise ValueError(scenario)
+
+
+def _row(scenario: str, machine, policy: str, protection: bool,
+         n: int, seed: int) -> dict:
+    process, timeline = _arrivals(scenario, machine, n, seed)
+    reqs = build_requests(process, n, seed=seed)
+    model = ServingModel(machine=machine)
+    t0 = time.perf_counter()
+    sim = SimServing(model, reqs, policy=policy, protection=protection,
+                     conditions=timeline, seed=seed).run()
+    wall = time.perf_counter() - t0
+    rep = sim.report(f"{scenario}/{machine.name}")
+    s = rep.serving
+    return {
+        "bench": "serving", "scenario": scenario,
+        "machine": machine.name, "policy": policy,
+        "protection": protection,
+        "requests": s["requests"],
+        "completed": s["completed"],
+        "shed": s["shed"], "timed_out": s["timed_out"],
+        "retries": s["retries"], "hedges": s["hedges"],
+        "hedge_wins": s["hedge_wins"], "degrades": s["degrades"],
+        "truncated_tokens": s["truncated_tokens"],
+        "p50_ms": round(s["p50_ms"], 2),
+        "p99_ms": round(s["p99_ms"], 2),
+        "attainment": round(s["attainment"], 4),
+        "goodput_rps": round(s["goodput_rps"], 2),
+        "time_s": round(rep.makespan, 4),
+        "energy_j": round(rep.energy, 4),
+        "edp": round(rep.edp, 4),
+        "cap_violation_s": round(rep.cap_violation_s, 4),
+        "wall_s": round(wall, 2),
+    }
+
 
 def run(smoke: bool = False) -> list[dict]:
-    rows = []
-    cfg = get_smoke_config("llama3.2-1b")
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    # bursty trace: 3 bursts of 6 requests with idle gaps (in ticks)
-    bursts = {0: 2} if smoke else {0: 6, 40: 6, 80: 6}
-    policies = ("prediction",) if smoke else ("busy", "idle", "prediction")
-
-    for policy in policies:
-        engine = ServingEngine(cfg, params, max_batch=4, max_len=96)
-        scaler = AutoScaler(engine.monitor, max_replicas=4, policy=policy,
-                            bus=engine.bus)
-        reqs = []
-        replica_ticks = 0
-        tick = 0
-        max_ticks, min_ticks = (60, 30) if smoke else (200, 100)
-        t0 = time.perf_counter()
-        while tick < max_ticks and (tick < min_ticks or engine.load):
-            for _ in range(bursts.get(tick, 0)):
-                p = rng.integers(0, cfg.vocab, size=8).tolist()
-                reqs.append(engine.submit(
-                    Request(prompt=p, max_new_tokens=12)))
-            target = scaler.target(len(engine.queue),
-                                   sum(r is not None
-                                       for r in engine.active))
-            replica_ticks += target
-            engine.tick()
-            tick += 1
-        wall = time.perf_counter() - t0
-        lat = [r.done_at - r.submitted_at for r in reqs if r.done]
-        rows.append({
-            "bench": "serving", "policy": policy,
-            "requests": len(reqs),
-            "completed": sum(r.done for r in reqs),
-            "tokens": engine.tokens_out,
-            "tok_per_s": round(engine.tokens_out / wall, 1),
-            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 1)
-            if lat else "NA",
-            "replica_ticks": replica_ticks,      # energy proxy
-        })
-        emit(rows[-1])
+    n = 2_000 if smoke else 100_000
+    machines = (MN4,) if smoke else (MN4, HYBRID_PE)
+    stacks = STACKS[::3] if smoke else STACKS   # endpoints only
+    rows: list[dict] = []
+    for machine in machines:
+        for scenario in ("poisson", "burst", "diurnal"):
+            for policy, protection in stacks:
+                rows.append(_row(scenario, machine, policy, protection,
+                                 n, seed=42))
+                emit(rows[-1])
     return rows
 
 

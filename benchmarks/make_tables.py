@@ -140,6 +140,29 @@ def faults_table() -> None:
               f"| {r['healthy_edp']:.6f} |")
 
 
+def serving_table() -> None:
+    """Overload-robustness tables from the committed
+    ``BENCH_serving.json`` (see ``benchmarks/bench_serving.py``)."""
+    bench = pathlib.Path(__file__).resolve().parents[1] \
+        / "BENCH_serving.json"
+    if not bench.exists():
+        print("\n(BENCH_serving.json not found — run "
+              "`python -m benchmarks.run --only serving` first)")
+        return
+    rows = json.loads(bench.read_text())["rows"]
+    print("\n| scenario | machine | stack | attainment | p50 ms "
+          "| p99 ms | goodput r/s | shed | retries | hedges "
+          "| aggregate EDP | violation s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        stack = r["policy"] + ("+protect" if r["protection"] else "")
+        print(f"| {r['scenario']} | {r['machine']} | {stack} "
+              f"| {r['attainment']:.3f} | {r['p50_ms']:.0f} "
+              f"| {r['p99_ms']:.0f} | {r['goodput_rps']:.1f} "
+              f"| {r['shed']} | {r['retries']} | {r['hedges']} "
+              f"| {r['edp']:.0f} | {r['cap_violation_s']:.2f} |")
+
+
 if __name__ == "__main__":
     print("## Generated tables (from artifacts/dryrun)")
     print("\n### §Dry-run")
@@ -150,3 +173,6 @@ if __name__ == "__main__":
     cluster_table()
     print("\n### §Faults (power caps, core faults, thermal throttling)")
     faults_table()
+    print("\n### §Serving under overload (SLO admission, retries, "
+          "brownout)")
+    serving_table()

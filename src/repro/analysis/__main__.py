@@ -8,9 +8,10 @@ the required CI ``analysis`` job.
 The lock/field pass runs on every target file; the determinism lint
 only on files in its scope: ``runtime/`` (except ``thread_executor.py``,
 whose real threads legitimately use the real clock), ``trace/``,
-``workloads/``, ``core/conditions.py`` (the machine-conditions timeline
-feeds the simulator and the trace round trip), and any module whose
-name mentions ``sim`` or ``replay``.
+``workloads/``, ``serving/`` (the SLO/overload layer must be replayable
+— clocks are injected, backoff jitter is seeded), ``core/conditions.py``
+(the machine-conditions timeline feeds the simulator and the trace
+round trip), and any module whose name mentions ``sim`` or ``replay``.
 """
 
 from __future__ import annotations
@@ -23,7 +24,7 @@ from .determinism import run_determinism
 from .lockcheck import run_lockcheck
 from .report import Finding, render_json, render_text
 
-_DETERMINISM_DIRS = {"trace", "workloads"}
+_DETERMINISM_DIRS = {"trace", "workloads", "serving"}
 
 
 def determinism_scope(path: Path) -> bool:

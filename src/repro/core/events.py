@@ -63,6 +63,22 @@ class EventKind(enum.Enum):
     #: payload, so a recorded perturbed run carries its own timeline
     #: and replays byte-exactly
     PERTURBATION = "perturbation"
+    #: request left the system without completing: refused by admission
+    #: control, evicted from a full queue by a higher-priority arrival,
+    #: or abandoned after its deadline/retry budget ran out
+    #: (``data["reason"]`` ∈ {"queue", "deadline", "timeout"})
+    SHED = "shed"
+    #: a timed-out attempt was re-released after exponential backoff
+    #: (``data``: try number, backoff seconds) or requeued uncharged
+    #: after a capacity change tore it off its replica
+    RETRY = "retry"
+    #: a hedged duplicate attempt was issued for a tail request
+    #: (``worker_id`` = the hedge replica; first completion wins)
+    HEDGE = "hedge"
+    #: graceful-degradation mode change: brownout engage/release under
+    #: a power cap, or a circuit breaker quarantining / re-probing a
+    #: replica (``data["mode"]``)
+    DEGRADE = "degrade"
 
 
 @dataclass(frozen=True, slots=True)

@@ -336,6 +336,12 @@ class GovernorReport:
     #: from unperturbed runs textually identical to the pre-conditions
     #: schema)
     cap_violation_s: float = field(default=0.0, repr=False)
+    #: serving-robustness metrics from the :class:`SimServing` frontend
+    #: (latency percentiles, per-class SLO attainment, goodput,
+    #: shed/retry/hedge/degrade counts).  ``{}`` everywhere else;
+    #: ``repr=False`` keeps non-serving reports textually identical to
+    #: the pre-overload schema.
+    serving: dict[str, Any] = field(default_factory=dict, repr=False)
 
 
 # ---------------------------------------------------------------------------

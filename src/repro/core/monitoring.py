@@ -126,6 +126,9 @@ class TypeMetrics:
     acc_sum: float = 0.0
     acc_count: int = 0
     completed: int = 0
+    #: instances that left the system without executing to completion
+    #: (admission shed, queue eviction, deadline/retry-budget exhaustion)
+    shed: int = 0
 
     @property
     def live_instances(self) -> int:
@@ -358,6 +361,31 @@ class TaskMonitor:
         with self._lock:
             self._completed_locked(task_id, type_name, cost, elapsed,
                                    parent_id, core_type, freq, suspect)
+
+    def on_task_shed(self, task_id: int, type_name: str,
+                     cost: float) -> None:
+        """A *ready* task left the system without executing (shed by
+        admission control, evicted from a full queue, or abandoned after
+        its deadline/retry budget ran out): reverse the ready
+        registration and drop its outstanding prediction — shed work
+        must stop inflating Δ, and a prediction that was never given a
+        chance to run must not poison the accuracy statistics.  A task
+        shed *mid-execution* goes through :meth:`on_task_abort` first
+        (executing → ready), then here (ready → gone)."""
+        with self._lock:
+            self.version += 1
+            m = self._types.get(type_name)
+            if m is None:
+                m = self._metrics(type_name)
+            m.ready_cost -= cost
+            m.ready_instances -= 1
+            m.shed += 1
+            self._predicted_at_start.pop(task_id, None)
+            self._outstanding.pop(task_id, None)
+
+    def shed_instances(self) -> int:
+        with self._lock:
+            return sum(m.shed for m in self._types.values())
 
     def on_task_abort(self, task_id: int, type_name: str,
                       cost: float) -> None:

@@ -1,7 +1,20 @@
 """Serving tier: continuous-batching engine + prediction-based
-autoscaling (the paper's Algorithm 1/2 applied to serving replicas)."""
+autoscaling (the paper's Algorithm 1/2 applied to serving replicas),
+with SLO-aware overload protection (admission control, retries/hedging,
+circuit breakers, brownout) and a discrete-event frontend that runs the
+whole robustness story at 10⁵-request scale in virtual time."""
 
 from .engine import Request, ServingEngine
 from .autoscale import AutoScaler
+from .slo import BATCH, INTERACTIVE, STANDARD, SLOClass
+from .admission import AdmissionController, CircuitBreaker, cap_allowance
+from .simserving import (ServingModel, SimRequest, SimServing,
+                         build_requests, replay_serving)
 
-__all__ = ["Request", "ServingEngine", "AutoScaler"]
+__all__ = [
+    "Request", "ServingEngine", "AutoScaler",
+    "SLOClass", "INTERACTIVE", "STANDARD", "BATCH",
+    "AdmissionController", "CircuitBreaker", "cap_allowance",
+    "ServingModel", "SimRequest", "SimServing", "build_requests",
+    "replay_serving",
+]

@@ -18,6 +18,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +28,10 @@ from ..core.events import EventBus, EventKind, RuntimeEvent
 from ..core.governor import GovernorSpec, ResourceGovernor
 from ..core.monitoring import TaskMonitor
 from ..models import ModelConfig, decode_step, init_cache, prefill
+from .admission import AdmissionController
+from .slo import SLOClass
 
 __all__ = ["Request", "ServingEngine"]
-
-_ids = itertools.count()
 
 
 @dataclass
@@ -38,7 +39,12 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: int | None = None
-    request_id: int = field(default_factory=lambda: next(_ids))
+    #: service contract (deadline/priority/…); None = plain best-effort
+    #: FIFO request, byte-identical to the pre-SLO engine
+    slo: SLOClass | None = None
+    #: assigned by the engine at submit (ids are *per engine* — two
+    #: engines in one process no longer interleave a global counter)
+    request_id: int | None = None
     # -- filled by the engine ------------------------------------------
     output: list[int] = field(default_factory=list)
     submitted_at: float = 0.0
@@ -47,6 +53,14 @@ class Request:
     @property
     def cost(self) -> float:
         return float(len(self.prompt) + self.max_new_tokens)
+
+    @property
+    def type_name(self) -> str:
+        return f"request:{self.slo.name}" if self.slo else "request"
+
+    @property
+    def priority(self) -> int:
+        return self.slo.priority if self.slo else 0
 
     @property
     def done(self) -> bool:
@@ -76,11 +90,28 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, monitor: TaskMonitor | None = None,
                  governor: ResourceGovernor | None = None,
-                 bus: EventBus | None = None) -> None:
+                 bus: EventBus | None = None,
+                 clock: Callable[[], float] | None = None,
+                 admission: AdmissionController | None = None,
+                 brownout_tokens: int | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # Injected time source (tests/sims pass virtual clocks; the
+        # default is the wall clock, referenced — never called — here).
+        self._clock = clock if clock is not None else time.perf_counter
+        # Overload protection (both default off = pre-SLO behaviour):
+        # an AdmissionController sheds at submit; ``brownout_tokens``,
+        # when set, truncates best-effort generations at admit time.
+        self.admission = admission
+        self.brownout_tokens = brownout_tokens
+        #: requests refused by admission control (terminal; not queued)
+        self.shed: list[Request] = []
+        # Per-engine id stream for requests and decode ticks (was a
+        # module global, which interleaved ids across engines and made
+        # single-engine traces depend on process history).
+        self._ids = itertools.count()
         # The engine is the workload side of the paper's loop: it
         # publishes request lifecycle events on ``self.bus``; the monitor
         # (owned by a governor — either one passed in and shared with an
@@ -133,28 +164,88 @@ class ServingEngine:
     # -- request lifecycle ---------------------------------------------------
 
     def _publish(self, kind: EventKind, task_id: int, type_name: str,
-                 cost: float, elapsed: float | None = None) -> None:
+                 cost: float, elapsed: float | None = None,
+                 data: dict | None = None) -> None:
         self.bus.publish(RuntimeEvent(
-            kind=kind, time=time.perf_counter(), task_id=task_id,
-            type_name=type_name, cost=cost, elapsed=elapsed))
+            kind=kind, time=self._clock(), task_id=task_id,
+            type_name=type_name, cost=cost, elapsed=elapsed,
+            data=data or {}))
 
     def submit(self, req: Request) -> Request:
-        req.submitted_at = time.perf_counter()
+        if req.request_id is None:
+            req.request_id = next(self._ids)
+        req.submitted_at = self._clock()
+        browned = False
+        if (self.brownout_tokens is not None and req.slo is not None
+                and req.slo.best_effort
+                and req.max_new_tokens > self.brownout_tokens):
+            # Brownout: truncate best-effort generations instead of
+            # shedding them (graceful degradation under a cap).  Applied
+            # before any event so the monitor accounts the served cost.
+            req.max_new_tokens = self.brownout_tokens
+            browned = True
+        self._publish(EventKind.TASK_SUBMITTED, req.request_id,
+                      req.type_name, req.cost)
+        if browned:
+            self._publish(EventKind.DEGRADE, req.request_id,
+                          req.type_name, req.cost,
+                          data={"mode": "brownout"})
+        self._publish(EventKind.TASK_READY, req.request_id,
+                      req.type_name, req.cost)
+        if self.admission is not None:
+            reason = self.admission.shed_reason(
+                now=req.submitted_at, queue_depth=len(self.queue),
+                slo=req.slo, submitted_at=req.submitted_at,
+                est_wait_s=self._est_wait_s(),
+                est_service_s=self._est_service_s(req))
+            if reason is not None:
+                # Monitor saw the READY above (bus-subscribed); reverse
+                # it so shed work stops inflating Δ.
+                self.monitor.on_task_shed(req.request_id, req.type_name,
+                                          req.cost)
+                req.done_at = req.submitted_at
+                self.shed.append(req)
+                self._publish(EventKind.SHED, req.request_id,
+                              req.type_name, req.cost,
+                              data={"reason": reason})
+                return req
         self.queue.append(req)
-        self._publish(EventKind.TASK_SUBMITTED, req.request_id, "request",
-                      req.cost)
-        self._publish(EventKind.TASK_READY, req.request_id, "request",
-                      req.cost)
         return req
+
+    def _est_service_s(self, req: Request) -> float:
+        """Predicted service seconds for ``req`` (0 while α is cold)."""
+        alpha = self.monitor.unitary_cost(req.type_name)
+        return req.cost * alpha if alpha is not None else 0.0
+
+    def _est_wait_s(self) -> float:
+        """Predicted queue wait: outstanding queued work over the batch
+        width (0 while the α estimates are cold)."""
+        total = 0.0
+        for r in self.queue:
+            alpha = self.monitor.unitary_cost(r.type_name)
+            if alpha is not None:
+                total += r.cost * alpha
+        return total / max(1, self.max_batch)
+
+    def _pop_next(self) -> Request:
+        """Highest-priority queued request; FIFO within a priority
+        class (all-default priorities reduce to plain ``pop(0)``)."""
+        best = 0
+        best_pri = self.queue[0].priority
+        for i in range(1, len(self.queue)):
+            pri = self.queue[i].priority
+            if pri > best_pri:
+                best, best_pri = i, pri
+        return self.queue.pop(best)
 
     def _admit(self) -> None:
         for slot in range(self.max_batch):
             if self.active[slot] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self._pop_next()
             self._publish(EventKind.TASK_EXECUTE, req.request_id,
-                          "request", req.cost)
-            t0 = time.perf_counter()
+                          req.type_name, req.cost)
+            t0 = self._clock()
             toks = req.prompt
             if self._bucketing:
                 bucket = max(16, 1 << (len(toks) - 1).bit_length())
@@ -170,7 +261,7 @@ class ServingEngine:
             self.tokens = self.tokens.at[slot].set(first)
             self.pos = self.pos.at[slot].set(len(req.prompt))
             self.remaining[slot] = req.max_new_tokens - 1
-            elapsed = time.perf_counter() - t0
+            elapsed = self._clock() - t0
             self._publish(EventKind.TASK_COMPLETED, req.request_id * 2 + 1,
                           "prefill", float(len(req.prompt)), elapsed)
 
@@ -182,15 +273,15 @@ class ServingEngine:
         live = [s for s, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
-        t0 = time.perf_counter()
+        t0 = self._clock()
         logits, self.cache = self._decode(self.params, self.tokens,
                                           self.pos, self.cache)
         nxt = jnp.argmax(logits[:, :self.cfg.vocab], axis=-1) \
             .astype(jnp.int32)
         self.tokens = nxt
         self.pos = self.pos + 1
-        elapsed = time.perf_counter() - t0
-        self._publish(EventKind.TASK_COMPLETED, next(_ids) * 2,
+        elapsed = self._clock() - t0
+        self._publish(EventKind.TASK_COMPLETED, next(self._ids) * 2,
                       "decode_tick", float(len(live)), elapsed)
         self.ticks += 1
         nxt_host = np.asarray(nxt)
@@ -204,9 +295,9 @@ class ServingEngine:
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if self.remaining[s] <= 0 or hit_eos \
                     or int(self.pos[s]) >= self.max_len - 1:
-                req.done_at = time.perf_counter()
+                req.done_at = self._clock()
                 self._publish(EventKind.TASK_COMPLETED, req.request_id,
-                              "request", req.cost,
+                              req.type_name, req.cost,
                               req.done_at - req.submitted_at)
                 self.active[s] = None
         return len(live)
@@ -216,7 +307,14 @@ class ServingEngine:
             if not self.queue and all(r is None for r in self.active):
                 return
             self.tick()
-        raise RuntimeError("engine did not drain")
+        now = self._clock()
+        live = [r for r in self.active if r is not None]
+        oldest = min((r.submitted_at for r in self.queue + live),
+                     default=now)
+        raise RuntimeError(
+            f"engine did not drain after {max_ticks} ticks: "
+            f"{len(self.queue)} queued, {len(live)} active slots, "
+            f"oldest request age {now - oldest:.3f}s")
 
     # -- autoscaler inputs ---------------------------------------------------------
 
